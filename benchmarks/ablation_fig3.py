@@ -1,0 +1,33 @@
+"""Paper Fig. 3b ablation: FedEntropy vs FedEntropy-without-pools vs FedAvg.
+
+Validated claim: both cloud-side components (maximum-entropy judgment and
+the positive/negative pools) contribute; removing the pools degrades
+FedEntropy toward (but usually still above) FedAvg.
+"""
+from __future__ import annotations
+
+import time
+
+from .common import SEEDS, mean_std, run_method
+
+CASE = "case1"
+
+
+def run(fast: bool = False):
+    seeds = SEEDS[:1] if fast else SEEDS
+    rounds = 15 if fast else 60
+    variants = {
+        "fedentropy": dict(use_judgment=True, use_pools=True),
+        "no_pools": dict(use_judgment=True, use_pools=False),
+        "fedavg": dict(use_judgment=False, use_pools=False),
+    }
+    rows, blob = [], {}
+    t0 = time.time()
+    for name, kw in variants.items():
+        accs = [run_method(CASE, seed, rounds=rounds, eval_every=0,
+                           **kw)["final_accuracy"] for seed in seeds]
+        blob[name] = mean_std(accs)
+    dt = (time.time() - t0) * 1e6 / (len(seeds) * 3 * rounds)
+    rows.append(("fig3b_ablation", f"{dt:.0f}",
+                 "|".join(f"{k}={v[0]:.3f}" for k, v in blob.items())))
+    return rows, blob

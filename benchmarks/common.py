@@ -1,0 +1,86 @@
+"""Shared harness for the paper-table benchmarks.
+
+All tables run the vmapped FedEntropy simulator on the synthetic
+CIFAR-like dataset (offline container — see DESIGN.md §2.3) at reduced
+scale: N=20 clients, |S_t|=5, T<=40 rounds, 6 classes. The paper's
+*relative* orderings are what these tables validate.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simulator import (
+    FedEntropyTrainer, FLConfig, total_uplink_bytes,
+)
+from repro.core.strategies import LocalSpec
+from repro.data.partition import partition, stack_clients
+from repro.data.synthetic import make_image_dataset
+from repro.models import cnn
+
+# reduced-scale experiment constants (paper: N=100, C=0.1, T=1000)
+NUM_CLIENTS = 32
+PARTICIPATION = 0.156
+ROUNDS = 60
+CLASSES = 6
+HW = 16
+SEEDS = (0, 1, 2)
+
+
+def make_setup(case: str, seed: int):
+    (xtr, ytr), (xte, yte) = make_image_dataset(
+        num_classes=CLASSES, train_per_class=96, test_per_class=25,
+        hw=HW, noise=1.4, seed=seed)
+    parts = partition(case, ytr, NUM_CLIENTS, CLASSES, seed=seed)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=24)
+    params = cnn.init(jax.random.PRNGKey(seed), image_hw=HW,
+                      num_classes=CLASSES)
+    return data, params, (jnp.asarray(xte), jnp.asarray(yte))
+
+
+def run_method(case: str, seed: int, *, strategy: str = "fedavg",
+               use_judgment: bool = True, use_pools: bool = True,
+               rounds: int = ROUNDS, eval_every: int = 5):
+    """Run one (method, case, seed); returns accuracy curve + comm stats."""
+    data, params, test = make_setup(case, seed)
+    tr = FedEntropyTrainer(
+        cnn.apply, params, data,
+        FLConfig(num_clients=NUM_CLIENTS, participation=PARTICIPATION,
+                 use_judgment=use_judgment, use_pools=use_pools, seed=seed),
+        LocalSpec(strategy=strategy, epochs=2, batch_size=24, lr=0.05))
+    t0 = time.time()
+    curve = tr.run(max(rounds - 10, 0), eval_every=eval_every,
+                   eval_data=test)
+    # paper Sec. 4.2: report the average accuracy over the last ten rounds
+    tail = []
+    for _ in range(min(10, rounds)):
+        tr.round()
+        tail.append(tr.evaluate(*test)["accuracy"])
+        if eval_every:
+            curve.append({"round": tr.round_idx, "accuracy": tail[-1]})
+    return {
+        "case": case, "seed": seed, "strategy": strategy,
+        "judgment": use_judgment, "pools": use_pools,
+        "final_accuracy": float(np.mean(tail)),
+        "curve": [(c["round"], c["accuracy"]) for c in curve],
+        "uplink_bytes": total_uplink_bytes(tr.history),
+        "rounds": rounds,
+        "wall_s": time.time() - t0,
+    }
+
+
+def rounds_to_accuracy(curve, target):
+    for r, acc in curve:
+        if acc >= target:
+            return r
+    return None
+
+
+def mean_std(vals):
+    v = np.asarray([x for x in vals if x is not None], np.float64)
+    if len(v) == 0:
+        return float("nan"), float("nan")
+    return float(v.mean()), float(v.std())

@@ -1,0 +1,59 @@
+"""Microbenchmarks: judgment throughput + kernel-vs-reference timings on CPU.
+
+Wall-times here are CPU curiosities (TPU is the target); the point is the
+scaling shape (judgment cost vs M and C) and that the jitted while_loop
+judgment is usable inside a train step.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.judgment import judge, judge_np
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                       # compile / warm
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(fast: bool = False):
+    rows, blob = [], {}
+    rng = np.random.default_rng(0)
+    jj = jax.jit(lambda p, s: judge(p, s).mask)
+
+    for (m, c) in [(10, 10), (16, 1024), (32, 65536)]:
+        p = jnp.asarray(rng.dirichlet(np.full(c, 0.3), size=m), jnp.float32)
+        s = jnp.asarray(rng.integers(10, 500, m), jnp.float32)
+        us_jax = _time(jj, p, s)
+        t0 = time.time()
+        judge_np(np.asarray(p), np.asarray(s))
+        us_np = (time.time() - t0) * 1e6
+        blob[f"judge_M{m}_C{c}"] = {"jax_us": us_jax, "numpy_us": us_np}
+        rows.append((f"judge_M{m}_C{c}", f"{us_jax:.0f}",
+                     f"numpy_us={us_np:.0f}|speedup={us_np / us_jax:.1f}x"))
+
+    # kernel sanity timing (interpret mode — correctness harness, not perf)
+    if not fast:
+        from repro.kernels.flash_attention import flash_attention
+        from repro.kernels.ref import mha_reference
+        q = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+        us_ref = _time(jax.jit(
+            lambda a, b, c_: mha_reference(a, b, c_)), q, k, v, iters=3)
+        rows.append(("mha_reference_128", f"{us_ref:.0f}",
+                     "xla_reference_path"))
+        err = float(jnp.abs(
+            flash_attention(q, k, v, block_q=32, block_k=32) -
+            mha_reference(q, k, v)).max())
+        rows.append(("flash_vs_ref_maxerr", "0", f"{err:.2e}"))
+        blob["flash_err"] = err
+    return rows, blob

@@ -1,0 +1,370 @@
+"""Render EXPERIMENTS.md from results/*.json artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report > EXPERIMENTS.md
+
+Sections: §Repro (paper tables at reduced scale), §Dry-run, §Roofline
+(single-pod baseline, all combos), §Perf (the three hillclimbed pairs,
+hypothesis->change->measure log, baseline vs beyond-paper optimized).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+R = "results"
+
+
+def load(name):
+    p = os.path.join(R, name)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def sec_repro(out):
+    out.append("## §Repro — paper tables at reduced scale\n")
+    out.append(
+        "Offline container ⇒ synthetic class-conditional image data "
+        "(orthonormal class templates + Gaussian noise, DESIGN.md §2.3); "
+        "N=32 clients, |S_t|=5, T=60 rounds (accuracy = mean of the last "
+        "10 rounds, per paper Sec. 4.2), 6 classes, 3 seeds (paper: N=100, "
+        "|S_t|=10, T=1000, CIFAR/CINIC). What reduced scale validates — "
+        "and what it honestly does not:\n\n"
+        "* **case 1 (strongest non-IID, the paper's headline)**: FedEntropy "
+        "decisively beats every baseline (+0.27 over the best), and the "
+        "Fig. 3b ablation reproduces the paper's ordering exactly — "
+        "judgment+pools > FedAvg > judgment-without-pools, i.e. BOTH cloud "
+        "components contribute, as the paper claims.\n"
+        "* **Table 3 synergy**: positive for all four optimizers "
+        "(FedAvg/FedProx strongly, SCAFFOLD/Moon marginally) — the paper's "
+        "orthogonality claim holds.\n"
+        "* **cases 2/3 (milder heterogeneity)**: FedEntropy trails FedAvg "
+        "at T=60 (vs the paper's T=1000). A *scale-dependent deviation*: "
+        "with milder skew the judgment filters less decisively while the "
+        "ε-greedy pools still pay their exploration cost up front "
+        "(~N/|S_t| rounds to cycle the population once); the paper itself "
+        "shows its thinnest margins in case 3.\n"
+        "* **communication (Table 2)**: unconditional — every judged round "
+        "uploads fewer model bytes; 36-40% uplink-byte savings at equal "
+        "round counts, matching (indeed exceeding) the paper's claim.\n")
+    t1 = load("bench_table1.json")
+    if t1:
+        out.append("### Table 1 — test accuracy (mean over seeds)\n")
+        out.append("| case | fedavg | fedprox | scaffold | moon | "
+                   "**fedentropy** |")
+        out.append("|---|---|---|---|---|---|")
+        for case, stats in t1["cases"].items():
+            row = [case] + [
+                f"{stats[m][0]:.3f}±{stats[m][1]:.3f}"
+                for m in ("fedavg", "fedprox", "scaffold", "moon",
+                          "fedentropy")]
+            out.append("| " + " | ".join(row) + " |")
+        out.append("")
+    t2 = load("bench_table2.json")
+    if t2:
+        out.append("### Table 2 — communication to target accuracy\n")
+        out.append("| case | target | rounds fedavg | rounds fedentropy | "
+                   "uplink bytes fedavg | fedentropy | saving |")
+        out.append("|---|---|---|---|---|---|---|")
+        for case, s in t2.items():
+            ra = s["rounds_to_target"]["fedavg"][0]
+            rf = s["rounds_to_target"]["fedentropy"][0]
+            ba = s["uplink_bytes"]["fedavg"][0]
+            bf = s["uplink_bytes"]["fedentropy"][0]
+            out.append(
+                f"| {case} | {s['target']:.0%} | {ra:.1f} | {rf:.1f} | "
+                f"{ba / 1e6:.1f}MB | {bf / 1e6:.1f}MB | "
+                f"{1 - bf / max(ba, 1):.1%} |")
+        out.append("")
+    t3 = load("bench_table3.json")
+    if t3:
+        out.append("### Table 3 — synergy with other FL optimizers "
+                   "(case 1)\n")
+        out.append("| optimizer | plain | + fedentropy | delta |")
+        out.append("|---|---|---|---|")
+        for strat, s in t3.items():
+            out.append(f"| {strat} | {s['plain'][0]:.3f} | "
+                       f"{s['with_fedentropy'][0]:.3f} | "
+                       f"{s['with_fedentropy'][0] - s['plain'][0]:+.3f} |")
+        out.append("")
+    f3 = load("bench_fig3.json")
+    if f3:
+        out.append("### Fig. 3b — component ablation (case 1)\n")
+        out.append("| variant | accuracy |")
+        out.append("|---|---|")
+        for k, v in f3.items():
+            out.append(f"| {k} | {v[0]:.3f}±{v[1]:.3f} |")
+        out.append("")
+    eps = load("bench_eps.json")
+    if eps:
+        out.append("### ε-sensitivity (beyond-paper ablation, case 1)\n")
+        out.append("| ε | accuracy (3 seeds) |")
+        out.append("|---|---|")
+        for k, v in eps.items():
+            out.append(f"| {k} | {v['mean']:.3f} |")
+        out.append(
+            "\nThe paper's ε=0.8 is confirmed as the sweet spot: pure "
+            "exploitation (ε=1.0 — negatives never revisited) and heavy "
+            "exploration (ε=0.5 — 50% of rounds aggregate previously-"
+            "harmful clients) both roughly halve the accuracy.\n")
+
+
+def _fits(r):
+    m = r["memory_analysis"]
+    per_dev = m.get("argument_size_in_bytes", 0) + \
+        m.get("temp_size_in_bytes", 0)
+    return per_dev / 2**30
+
+
+def sec_dryrun(out):
+    out.append("## §Dry-run — 10 archs × 4 shapes × {16×16, 2×16×16}\n")
+    for tag, fname in (("single-pod (256 chips)", "dryrun_single_pod.json"),
+                       ("multi-pod (512 chips)", "dryrun_multi_pod.json"),
+                       ("multi-pod, optimized defaults",
+                        "dryrun_multi_pod_optimized.json")):
+        recs = load(fname)
+        if not recs:
+            continue
+        ok = [r for r in recs if r["status"] == "ok"]
+        skip = [r for r in recs if r["status"] == "skipped"]
+        err = [r for r in recs if r["status"] == "error"]
+        out.append(f"### {tag}: {len(ok)} lowered+compiled, "
+                   f"{len(skip)} documented skip, {len(err)} errors\n")
+        out.append("| arch | shape | compile s | args+temp GiB/dev | "
+                   "fits 16 GiB | collectives |")
+        out.append("|---|---|---|---|---|---|")
+        for r in ok:
+            gb = _fits(r)
+            colls = ",".join(f"{k}:{v}" for k, v in
+                             sorted(r["collective_counts"].items()))
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} | "
+                f"{gb:.2f} | {'yes' if gb <= 16 else 'NO'} | {colls} |")
+        for r in skip:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | skip | "
+                       f"{r['reason'][:70]} |")
+        out.append("")
+    out.append(
+        "Skip note: whisper-large-v3 × long_500k is the single documented "
+        "skip (bounded-context architecture, DESIGN.md §4). Combos over "
+        "16 GiB/device are honest baseline findings — §Perf drives the "
+        "three chosen ones down; the rest are listed with their dominant "
+        "cause in §Roofline notes.\n")
+
+
+def sec_roofline(out):
+    recs = load("dryrun_single_pod.json")
+    if not recs:
+        return
+    out.append("## §Roofline — single-pod baseline, per (arch × shape)\n")
+    out.append(
+        "Terms (seconds/step/device): compute = loop-aware HLO dot-FLOPs / "
+        "197 TF/s; memory = bytes-accessed / 819 GB/s; collective = "
+        "collective operand bytes / 50 GB/s. `useful` = 6·N_active·D / "
+        "(HLO FLOPs × chips). Methodology: cost_analysis() counts while "
+        "bodies once, so terms come from the loop-aware HLO walker "
+        "(launch/hlo_analysis.py); memory follows HloCostAnalysis "
+        "conventions (fusion operands+result; sliced access for "
+        "dynamic-slice/DUS).\n")
+    out.append("| arch | shape | compute s | memory s | collective s | "
+               "dominant | useful | one-line diagnosis |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    diag = {
+        ("whisper-large-v3", "prefill_32k"):
+            "20 heads ∤ 16 ⇒ attention replicated over model axis + S² "
+            "scores (fixed in §Perf)",
+        ("whisper-large-v3", "train_4k"):
+            "same head-indivisibility replication",
+        ("qwen3-moe-235b-a22b", "decode_32k"):
+            "1-token MoE: expert weights streamed for 128 tokens/shard",
+        ("kimi-k2-1t-a32b", "decode_32k"):
+            "1-token MoE: 1T weights streamed; batch 128 too small to "
+            "amortize",
+        ("kimi-k2-1t-a32b", "long_500k"):
+            "B=1 decode: whole pod idle except weight streaming",
+        ("kimi-k2-1t-a32b", "train_4k"):
+            "MoE a2a + FSDP gathers; hillclimbed in §Perf",
+    }
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        d = diag.get((r["arch"], r["shape"]), "")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{t['dominant'][:-2]} | {r['useful_flops_ratio'] * 100:.1f}% "
+            f"| {d} |")
+    out.append("")
+    out.append(
+        "Reading: every baseline combo is **memory-term dominated** — the "
+        "XLA-reference attention materializes S² score tensors and the "
+        "fp32 vocab head streams (B,S,V); decode shapes additionally "
+        "stream all weights for one token (inherent at batch ≤ 128). "
+        "`useful` < 50% flags replicated compute (indivisible heads), "
+        "remat recompute, and MoE capacity padding.\n")
+    opt = load("dryrun_single_pod_optimized.json")
+    if opt:
+        out.append("### Optimized sweep (blockwise attention + chunked "
+                   "head + capacity 1.0) — beyond-paper defaults\n")
+        out.append("| arch | shape | memory s (base→opt) | GiB/dev "
+                   "(base→opt) | useful (base→opt) |")
+        out.append("|---|---|---|---|---|")
+        base = {(r["arch"], r["shape"]): r for r in recs
+                if r["status"] == "ok"}
+        for r in opt:
+            if r["status"] != "ok":
+                continue
+            b = base.get((r["arch"], r["shape"]))
+            if not b:
+                continue
+            out.append(
+                f"| {r['arch']} | {r['shape']} | "
+                f"{b['roofline']['memory_s']:.2f}→"
+                f"{r['roofline']['memory_s']:.2f} | "
+                f"{_fits(b):.1f}→{_fits(r):.1f} | "
+                f"{b['useful_flops_ratio'] * 100:.0f}%→"
+                f"{r['useful_flops_ratio'] * 100:.0f}% |")
+        out.append("")
+
+
+PERF_LOG = """## §Perf — hillclimbing the three chosen pairs
+
+Chosen per the assignment: **whisper-large-v3 × prefill_32k** (worst
+roofline fraction, useful 3.5%), **kimi-k2-1t-a32b × train_4k** (largest
+collective term, 23.0 s), **qwen3-0.6b × train_4k** (most representative
+of the paper's technique — the full FedEntropy train step: in-step
+soft-label collection, while-loop judgment, masked weighted aggregation).
+
+The paper itself contains no kernel/sharding contribution (aggregation
+heuristic; repro band 2/5), so the *paper-faithful baseline* is the
+unoptimized framework executing FedEntropy semantics exactly; every row
+below is a **beyond-paper** systems optimization that leaves FedEntropy
+semantics bit-identical (verified: optimized and baseline train steps
+produce the same masks/losses in tests).
+
+### qwen3-0.6b × train_4k   (baseline: cmp 0.167 s | mem 3.396 s | col 1.398 s | useful 44.5% | 19.09 GiB/dev)
+
+| it | hypothesis (napkin math) | change | result | verdict |
+|---|---|---|---|---|
+| 1 | S² scores (16·16·4096²·4B ≈ 4.3 GiB/dev·layer traffic) dominate memory term; blockwise attention removes them | `--attn blockwise` (flash-style lax.scan, online softmax, per-block remat) | mem 3.40→4.12 s (+21%), peak 19.1→19.1 GiB | **REFUTED** at S=4096: per-device scores are modest after head-sharding; checkpoint recompute *adds* traffic; peak unmoved ⇒ peak is not scores |
+| 2 | fp32 logits+softmax chains ((B,S,V): 2.7 GiB/dev ×~4 live copies for CE + Eq.2 soft labels) drive the 19 GiB peak | `--chunked-head` (stream vocab projection + CE + soft-label accumulation in 512-token chunks, per-chunk remat) | peak 19.09→**12.47 GiB (fits)**, mem 3.40→3.41 s, masks/loss bit-identical | **CONFIRMED** for peak; traffic neutral (recompute ≈ savings) |
+| 3 | with peak fixed, remaining mem term is FSDP weight streaming (irreducible at this size) + attention; further <5% expected | stop (two consecutive <5% candidates) | — | stopping rule hit |
+
+Final: chunked head. The FedEntropy-specific cost (judgment while-loop +
+(M,V) soft labels) measures <0.1% of any term — the paper's claim that
+stage-1 soft labels are negligible holds at 152k-class LM scale.
+
+### whisper-large-v3 × prefill_32k   (baseline: cmp 1.845 s | mem 70.78 s | col 0.72 s | useful 3.5% | 326.5 GiB/dev)
+
+| it | hypothesis | change | result | verdict |
+|---|---|---|---|---|
+| 1 | S²=32k² scores (86 GiB/layer) are the 326 GiB peak | `--attn blockwise` | peak 326.5→**6.35 GiB**, mem 70.8→76.9 s (+8% recompute) | **CONFIRMED** for peak; traffic needs the second lever |
+| 2 | 20 heads ∤ 16 ⇒ the whole attention replicates over the model axis: 16× redundant compute AND traffic; shard the *seq* dim over "model" instead | `--seq-rule` (sequence-parallel activations) | cmp 1.845→**0.155 s (11.9×)**, mem 76.9→**5.35 s (14.4×)**, col 0.72→0.059 s, useful 3.5→**41.1%**, peak 1.08 GiB | **CONFIRMED** — head-indivisibility was the real bottleneck |
+
+Final: blockwise + sequence-parallelism. 13.2× memory-term and 11.9×
+compute-term reduction; the arch now fits a single host's HBM with 15×
+headroom. Lesson: divisibility-aware *fallback-to-replication* (the safe
+default) must fall back to a *different parallel axis*, not to replication.
+
+The same lever stack applied to whisper × **train_4k** (not one of the
+three chosen pairs; measured for completeness): cmp 1.22→0.39 s (3.2×),
+mem 63.5→16.8 s (3.8×), useful 15.7→49.3%, peak 312→67.7 GiB — still
+over budget because the *cross*-attention's 20 heads keep partially
+replicating (XLA SPMD logs "involuntary full rematerialization" on the
+enc-KV reshard). Next lever (napkin'd, unimplemented): pad attention
+heads 20→32 at the parameter level for clean 16-way head sharding
+(+60% attention params, −16× cross-attn activation replication).
+
+### kimi-k2-1t-a32b × train_4k   (baseline: cmp 6.89 s | mem 47.02 s | col 22.98 s | useful 56.0% | 71.6 GiB/dev)
+
+| it | hypothesis | change | result | verdict |
+|---|---|---|---|---|
+| 1 | 164k-vocab head matters at 1M tokens | `--chunked-head` | all terms ±0.2% | **REFUTED** — head ≪ 61 layers of 384-expert MoE |
+| 2 | capacity 1.25→1.0 cuts a2a payload 20% and padded expert FLOPs | `--capacity-factor 1.0` | col 23.1→21.2 s (−8%), mem −9%, useful 56→65% | **CONFIRMED** (smaller than napkin: FSDP gathers, not a2a, are the larger collective) |
+| 3 | `remat=dots` saves matmul outputs ⇒ bwd re-gathers fewer FSDP shards | `--remat dots` | col −2%, but temp 54.6→**217.8 GiB** (4×) | **REFUTED/rejected** — saved dot outputs explode memory |
+| 4 | activations replicated on "model" axis make fwd-recompute all-gathers 16× too big | `--seq-rule` | col 21.2→**15.5 s (−27%)**, mem →39.3 s, useful 61.4% | **CONFIRMED** |
+| 5 | remaining 54.6 GiB temp = materialized attention scores (16·64·256·4096·4B ≈ 17 GiB/layer transient) | `--attn blockwise` on top | temp 54.6→47.3 GiB but mem term +17% (recompute) | **partially confirmed** — scores were ~7 GiB; traded away, kept OFF |
+
+Final config: capacity 1.0 + sequence-parallel activations:
+**collective 23.0→15.5 s (−33%)**, memory 47.0→39.3 s (−16%), useful
+56→61.4%. Honest finding: kimi-k2 train at 4k×256 does **not** fit a
+single 256-chip v5e pod (69.7 GiB/dev incl. 15.2 GiB FSDP-sharded
+params+momentum); the multi-pod 512-chip mesh (§Dry-run) halves state and
+is the deployment target. Next levers (unimplemented, napkin'd):
+micro-batched a2a (stream capacity in 4 slices: −75% dispatch transient),
+fp8 dispatch payloads (−50% a2a bytes).
+
+### Bonus iteration: KV-cache time sharding for decode shapes
+
+Hypothesis: the four archs whose kv_heads don't divide the 16-way "model"
+axis (whisper kv=20, chatglm kv=2, qwen3-moe kv=4, kimi kv=8) replicate
+their ENTIRE KV cache across the model axis during decode — the dominant
+decode buffer. Sharding the cache *time* dimension over "model" instead
+(`--kv-time-rule`; distributed-softmax reduction handled by XLA SPMD):
+
+| arch | decode_32k | memory_s | GiB/dev | fits 16 GiB |
+|---|---|---|---|---|
+| whisper-large-v3 | base → kv_time | 7.81 → **0.29 (27×)** | 63.8 → **11.3** | NO → **yes** |
+| qwen3-moe-235b | base → kv_time | 20.2 → **1.18 (17×)** | 67.9 → **15.2** | NO → **yes** |
+| kimi-k2-1t | base → kv_time | 2.67 → 2.28 | 100.8 → **40.4** | NO → NO (params-bound; needs multi-pod) |
+| chatglm3-6b | base → kv_time | 0.44 → **0.054 (8×)** | 8.4 → **1.8** | yes → yes |
+
+**CONFIRMED** — three more production combos become single-pod-feasible.
+This generalizes the whisper lesson: whenever a preferred sharding axis is
+indivisible, route the parallelism to a *different* tensor dimension
+(seq for activations, time for caches) instead of replicating.
+
+### Bonus iteration: two-phase microbatching (kimi multi-pod) — REFUTED
+
+Hypothesis: kimi train on the 512-chip mesh with all levers still peaks at
+39.7 GiB/dev (temp 32.1), dominated by per-layer activations at global
+batch 256; a two-phase microbatched round (phase 1 = forward-only
+soft-label accumulation + one judgment — literally the paper's stage 1;
+phase 2 = gradient accumulation with the judged mask — stage 2) at n=4
+should cut activation temp ~4x toward ~15 GiB.
+
+Measured: temp 32.1→**42.4 GiB (worse)**, collective bytes 570→**1814 GB
+(3.2x)**. Refuted on both terms: (a) the f32 gradient accumulator is
+resident across the scan (1.06T params x 4 B / 512 = **8.3 GiB** + scan
+double-buffering); (b) phase 1 re-runs every FSDP weight gather, and each
+phase-2 microbatch re-gathers the full 2 TB parameter set — collectives
+scale with n_microbatches for an FSDP-sharded giant, the opposite of the
+dense-model intuition. Lessons: microbatching giant-MoE FSDP training
+needs bf16/reduce-scattered gradient accumulation and gather reuse across
+microbatches before it pays; the feature (with an exactness test vs the
+fused step) stays in the framework for activation-bound *dense* models.
+The fused single-pass FedEntropy step remains the production default.
+
+### FedEntropy-specific distributed cost (the paper's own technique)
+
+Measured inside the qwen3 train step (single-pod, M=16 clients):
+soft-label collection (M,V) = 9.7 MB gathered; judgment while-loop ≤ M-1
+iterations of an O(M·V) sweep = <2 ms compute; masked aggregation reuses
+the existing gradient all-reduce with per-client weights — the paper's
+"communication savings" materialize as negative devices contributing zero
+gradient (on WAN cross-silo FL, their model bytes are never sent; on a
+pod, the all-reduce payload is unchanged but its *information* content is
+the judged subset). Stage-1 soft-label traffic is 0.03% of one FSDP layer
+gather — the paper's negligibility claim holds three orders of magnitude
+beyond its CIFAR setting.
+"""
+
+
+def main():
+    out = ["# EXPERIMENTS — FedEntropy framework\n"]
+    out.append(
+        "Artifacts: results/*.json (regenerate: `make sweeps` or the "
+        "commands in each section). Hardware model: TPU v5e — 197 TF/s "
+        "bf16, 819 GB/s HBM, 50 GB/s/link ICI; CPU container ⇒ all "
+        "roofline terms are derived from compiled HLO, not wall clock.\n")
+    sec_repro(out)
+    sec_dryrun(out)
+    sec_roofline(out)
+    out.append(PERF_LOG)
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: FedEntropy on the paper's CNN in ~60 seconds on CPU.
+
+Reproduces the paper's core loop (Alg. 2) at toy scale: 12 clients with
+single-label (case-1) non-IID data, maximum-entropy judgment picking the
+aggregation set each round, epsilon-greedy pools across rounds. Prints the
+per-round positive/negative split and the accuracy trajectory vs FedAvg.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.simulator import FedEntropyTrainer, FLConfig
+from repro.core.strategies import LocalSpec
+from repro.data.partition import partition, stack_clients
+from repro.data.synthetic import make_image_dataset
+from repro.models import cnn
+
+NUM_CLIENTS, CLASSES, ROUNDS = 12, 4, 8
+
+
+def main():
+    (xtr, ytr), (xte, yte) = make_image_dataset(
+        num_classes=CLASSES, train_per_class=100, test_per_class=25,
+        hw=16, noise=0.6, seed=3)
+    parts = partition("case1", ytr, NUM_CLIENTS, CLASSES, seed=0)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=25)
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=16,
+                      num_classes=CLASSES)
+    test = (jnp.asarray(xte), jnp.asarray(yte))
+
+    results = {}
+    for name, use_judgment in [("FedEntropy", True), ("FedAvg", False)]:
+        tr = FedEntropyTrainer(
+            cnn.apply, params, data,
+            FLConfig(num_clients=NUM_CLIENTS, participation=0.34,
+                     use_judgment=use_judgment, use_pools=use_judgment,
+                     seed=0),
+            LocalSpec(epochs=2, batch_size=25, lr=0.02))
+        print(f"== {name} ==")
+        for r in range(ROUNDS):
+            rec = tr.round()
+            acc = tr.evaluate(*test)["accuracy"]
+            print(f"  round {r}: positives={len(rec['positive'])}/"
+                  f"{len(rec['selected'])} entropy={rec['entropy']:.3f} "
+                  f"acc={acc:.3f} "
+                  f"uplink_savings={rec['comm']['savings_fraction']:.0%}")
+        results[name] = acc
+    print(f"\nfinal: FedEntropy={results['FedEntropy']:.3f} "
+          f"vs FedAvg={results['FedAvg']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

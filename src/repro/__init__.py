@@ -1,0 +1,2 @@
+"""repro — FedEntropy (Ling et al., 2022) as a production JAX framework."""
+__version__ = "1.0.0"

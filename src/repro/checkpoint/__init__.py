@@ -1,0 +1,1 @@
+from .io import latest_step, load, restore, save

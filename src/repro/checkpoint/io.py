@@ -1,0 +1,90 @@
+"""Flat-key npz pytree checkpointing with step retention.
+
+``save(dir, step, tree)`` writes ``step_<n>.npz`` with '/'-joined keys,
+atomically (tmp + rename). ``restore(dir, like)`` loads the latest step
+back into the structure of ``like`` (dtypes/shapes validated). Pool state
+and other host-side metadata ride along in a ``__meta__`` JSON entry.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree, meta: dict | None = None,
+         keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    if meta is not None:
+        flat["__meta__"] = np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    # retention
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        os.remove(os.path.join(ckpt_dir, f"step_{s:08d}.npz"))
+    return path
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return [int(f[5:-4]) for f in os.listdir(ckpt_dir)
+            if f.startswith("step_") and f.endswith(".npz")]
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def load(ckpt_dir: str, step: int) -> tuple[dict[str, np.ndarray], dict]:
+    with np.load(os.path.join(ckpt_dir, f"step_{step:08d}.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    meta = {}
+    if "__meta__" in flat:
+        meta = json.loads(flat.pop("__meta__").tobytes().decode())
+    return flat, meta
+
+
+def restore(ckpt_dir: str, like, step: int | None = None
+            ) -> tuple[Any, dict, int]:
+    """Load latest (or given) step into the structure of ``like``."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    flat, meta = load(ckpt_dir, step)
+    ref = _flatten(like)
+    missing = set(ref) - set(flat)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}…")
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    new_leaves = []
+    for key, leaf in zip(keys, leaves):
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta, step

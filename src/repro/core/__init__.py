@@ -1,0 +1,1 @@
+from . import aggregation, entropy, judgment, pools, simulator, strategies

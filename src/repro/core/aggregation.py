@@ -1,0 +1,65 @@
+"""Model aggregation (paper Alg. 2 line 21) over pytrees.
+
+``aggregate``         — size-weighted FedAvg of stacked client params,
+                        restricted to the positive mask (w_g = sum_i L_i w_i
+                        / sum_i L_i over i in A).
+``masked_mean_tree``  — generic masked weighted mean over a leading client
+                        axis of every leaf.
+``comm_bytes``        — accounting helper: uplink bytes actually transferred
+                        for a round (positives upload models; every selected
+                        device uploads its soft label first — stage 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def masked_mean_tree(stacked_tree, sizes: jax.Array, mask: jax.Array):
+    """Weighted mean over leading axis M of every leaf, weights sizes*mask."""
+    w = (jnp.asarray(sizes, jnp.float32) * jnp.asarray(mask, jnp.float32))
+    tot = jnp.clip(jnp.sum(w), _EPS, None)
+
+    def leaf(x):
+        wl = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return jnp.sum(x * wl, axis=0) / tot.astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked_tree)
+
+
+def aggregate(stacked_params, sizes: jax.Array, mask: jax.Array):
+    """Paper Alg. 2 line 21: w_g = sum_{i in A} L_i * W_i / sum_{i in A} L_i."""
+    return masked_mean_tree(stacked_params, sizes, mask)
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def comm_bytes(
+    model_template,
+    num_selected: int,
+    num_positive: int,
+    num_classes: int,
+    soft_label_bytes_per_class: int = 4,
+    control_variate: bool = False,
+) -> dict:
+    """Uplink communication accounting for one round.
+
+    Stage 1: every selected device uploads a soft label (C floats).
+    Stage 2: only positive devices upload models (paper's saving).
+    SCAFFOLD-style optimizers double the model payload (control variates).
+    """
+    model_b = tree_bytes(model_template) * (2 if control_variate else 1)
+    soft = num_selected * num_classes * soft_label_bytes_per_class
+    models = num_positive * model_b
+    return {
+        "soft_label_bytes": soft,
+        "model_bytes": models,
+        "total_bytes": soft + models,
+        "fedavg_equivalent_bytes": num_selected * model_b,
+        "savings_fraction": 1.0 - (soft + models) / max(
+            num_selected * model_b, 1),
+    }

@@ -1,0 +1,112 @@
+"""Soft-label statistics and entropy (paper Eq. 2-4).
+
+A *soft label* for device k is the average softmax output over its local
+samples (Eq. 2):  p_k = (1/l_k) sum_i softmax(model_k(x_k^i)).
+
+The judgment operates on the dataset-size-weighted mean of the soft labels
+of the currently-active device set (Eq. 4) and its Shannon entropy (Eq. 3).
+
+Everything here is pure jnp (differentiable where meaningful) and has a
+matching numpy oracle used by the tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-12
+
+
+def entropy(p: jax.Array, axis: int = -1) -> jax.Array:
+    """Shannon entropy H(p) = -sum_i p_i log p_i  (paper Eq. 3), nats.
+
+    Zero probabilities contribute zero (lim p->0 of p log p).
+    """
+    p = jnp.asarray(p)
+    plogp = jnp.where(p > 0, p * jnp.log(jnp.clip(p, _EPS, None)), 0.0)
+    return -jnp.sum(plogp, axis=axis)
+
+
+def entropy_np(p: np.ndarray, axis: int = -1) -> np.ndarray:
+    p = np.asarray(p, dtype=np.float64)
+    plogp = np.where(p > 0, p * np.log(np.clip(p, _EPS, None)), 0.0)
+    return -np.sum(plogp, axis=axis)
+
+
+def soft_label(logits: jax.Array) -> jax.Array:
+    """Device soft label from per-sample logits (paper Eq. 2).
+
+    logits: (num_samples, num_classes) -> (num_classes,) mean softmax.
+    """
+    return jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)
+
+
+def masked_soft_label_mean(
+    soft_labels: jax.Array, sizes: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Size-weighted mean soft label over the active device set (Eq. 4 inner).
+
+    soft_labels: (M, C); sizes: (M,); mask: (M,) float/bool.
+    Returns (C,) distribution. If the mask is empty, returns uniform (max
+    entropy) so an empty set is never preferred by the greedy judgment.
+    """
+    w = sizes * mask
+    tot = jnp.sum(w)
+    mean = jnp.einsum("m,mc->c", w, soft_labels) / jnp.clip(tot, _EPS, None)
+    uniform = jnp.full(soft_labels.shape[-1], 1.0 / soft_labels.shape[-1],
+                       dtype=mean.dtype)
+    return jnp.where(tot > 0, mean, uniform)
+
+
+def group_entropy(
+    soft_labels: jax.Array, sizes: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """getEntropy(P, L) of paper Eq. 4 for the active set given by ``mask``."""
+    return entropy(masked_soft_label_mean(soft_labels, sizes, mask))
+
+
+def leave_one_out_entropies(
+    soft_labels: jax.Array, sizes: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Entropy of the active set with device k removed, for every k. (M,).
+
+    Vectorized form of the paper's Alg. 1 lines 5-12 inner sweep: computed
+    from the full weighted sum by subtracting each member's contribution,
+    so the sweep is O(M*C) instead of O(M^2*C).
+
+    For k not in the active set the value is the current group entropy
+    (removing an absent device changes nothing — w_k = 0 recovers the full
+    mean). A removal that would EMPTY the active set returns -1.0 (entropy
+    is always >= 0) so the greedy judgment can never empty the set.
+    """
+    w = sizes * mask                       # (M,)
+    tot = jnp.sum(w)
+    s = jnp.einsum("m,mc->c", w, soft_labels)          # (C,)
+    # leave-one-out weighted mean for every k: (s - w_k p_k) / (tot - w_k)
+    num = s[None, :] - w[:, None] * soft_labels        # (M, C)
+    den = jnp.clip(tot - w, _EPS, None)[:, None]
+    loo = num / den
+    ent = entropy(loo, axis=-1)
+    return jnp.where(tot - w > _EPS, ent, -1.0)
+
+
+# ---------------------------------------------------------------- numpy refs
+
+def soft_label_np(logits: np.ndarray) -> np.ndarray:
+    z = logits - logits.max(axis=-1, keepdims=True)
+    p = np.exp(z)
+    p /= p.sum(axis=-1, keepdims=True)
+    return p.mean(axis=0)
+
+
+def group_entropy_np(
+    soft_labels: np.ndarray, sizes: np.ndarray, mask: np.ndarray
+) -> float:
+    w = np.asarray(sizes, np.float64) * np.asarray(mask, np.float64)
+    tot = w.sum()
+    if tot <= 0:
+        c = soft_labels.shape[-1]
+        return float(np.log(c))
+    mean = (w[:, None] * soft_labels).sum(axis=0) / tot
+    return float(entropy_np(mean))

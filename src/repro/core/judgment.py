@@ -1,0 +1,193 @@
+"""Maximum Entropy Judgment (paper Algorithm 1).
+
+Two interchangeable implementations:
+
+* ``judge_np``      — literal numpy transcription of Algorithm 1 (the test
+                      oracle; greedy per-iteration re-scan like the paper).
+* ``judge``         — pure-JAX ``lax.while_loop`` version that runs *inside*
+                      a jitted/pjitted train step. Uses the vectorized
+                      leave-one-out sweep (O(M*C) per iteration) and returns
+                      a float mask over the M candidates.
+
+Both are exact greedy: per iteration, remove the single device whose removal
+maximally increases the size-weighted group entropy; stop when no removal
+strictly improves it. They provably agree (tests/test_judgment.py, incl. a
+hypothesis sweep).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .entropy import (
+    group_entropy,
+    group_entropy_np,
+    leave_one_out_entropies,
+)
+
+# Strict-improvement tolerance: float32 entropy of broad (e.g. 151k-class)
+# distributions has ~1e-6 noise; require improvement above it.
+_TOL = 1e-6
+
+
+class JudgmentResult(NamedTuple):
+    mask: jax.Array          # (M,) float32 — 1.0 = positive device (set A)
+    entropy: jax.Array       # () final group entropy over positives
+    initial_entropy: jax.Array  # () entropy before any removal
+    num_removed: jax.Array   # () int32 — |R|
+
+
+def judge(
+    soft_labels: jax.Array,
+    sizes: jax.Array,
+    active: jax.Array | None = None,
+    max_removals: int | None = None,
+    backend: str = "xla",
+) -> JudgmentResult:
+    """Algorithm 1 as a ``lax.while_loop`` — trace-compatible.
+
+    soft_labels: (M, C) per-device mean softmax (Eq. 2).
+    sizes:       (M,)   per-device sample counts (L in the paper).
+    active:      (M,)   optional 0/1 mask of devices actually selected this
+                        round (S_t); inactive devices are neither judged nor
+                        returned as positive.
+    max_removals: optional cap on |R| (defaults to M-1; the judgment can
+                        never empty the set regardless).
+    backend:     "xla" (pure jnp leave-one-out sweep) or "pallas" (the
+                        entropy_judge kernel — class-axis-tiled, for huge C).
+    """
+    soft_labels = jnp.asarray(soft_labels, jnp.float32)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    m = soft_labels.shape[0]
+    if active is None:
+        active = jnp.ones((m,), jnp.float32)
+    active = jnp.asarray(active, jnp.float32)
+    cap = m - 1 if max_removals is None else int(max_removals)
+
+    init_ent = group_entropy(soft_labels, sizes, active)
+
+    def cond(state):
+        mask, ent, removed, improved = state
+        return jnp.logical_and(improved, removed < cap)
+
+    def _loo(mask):
+        if backend == "pallas":
+            from ..kernels import ops as kops
+            _, loo = kops.entropy_judge_sweep(soft_labels, sizes, mask,
+                                              backend="pallas")
+            return loo
+        return leave_one_out_entropies(soft_labels, sizes, mask)
+
+    def body(state):
+        mask, ent, removed, _ = state
+        loo = _loo(mask)                                         # (M,)
+        # only currently-active devices are candidates
+        cand = jnp.where(mask > 0, loo, -jnp.inf)
+        best = jnp.argmax(cand)
+        best_ent = cand[best]
+        improves = best_ent > ent + _TOL
+        new_mask = jnp.where(
+            improves, mask.at[best].set(0.0), mask
+        )
+        new_ent = jnp.where(improves, best_ent, ent)
+        return (new_mask, new_ent,
+                removed + jnp.where(improves, 1, 0).astype(jnp.int32),
+                improves)
+
+    mask, ent, removed, _ = jax.lax.while_loop(
+        cond, body,
+        (active, init_ent, jnp.zeros((), jnp.int32), jnp.array(True)),
+    )
+    return JudgmentResult(mask=mask, entropy=ent,
+                          initial_entropy=init_ent, num_removed=removed)
+
+
+def judge_budgeted(
+    soft_labels: jax.Array,
+    sizes: jax.Array,
+    budget: int,
+    active: jax.Array | None = None,
+) -> JudgmentResult:
+    """Beyond-paper variant: FORWARD greedy selection under a fixed uplink
+    budget — pick exactly ``budget`` devices that maximize the group
+    entropy, growing the set from empty (facility-location-style greedy).
+
+    The paper's Algorithm 1 removes harmful devices but the number of
+    uploads per round is whatever survives; cross-device deployments often
+    need a hard per-round upload budget instead. Greedy forward selection
+    gives that knob while keeping the same maximum-entropy objective.
+    """
+    soft_labels = jnp.asarray(soft_labels, jnp.float32)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    m = soft_labels.shape[0]
+    if active is None:
+        active = jnp.ones((m,), jnp.float32)
+    active = jnp.asarray(active, jnp.float32)
+    budget = min(int(budget), m)
+    init_ent = group_entropy(soft_labels, sizes, active)
+
+    def add_one(state, _):
+        mask = state
+        w = sizes * mask
+        tot = jnp.sum(w)
+        s = jnp.einsum("m,mc->c", w, soft_labels)
+        # entropy if device k were ADDED
+        num = s[None, :] + (sizes * active)[:, None] * soft_labels
+        den = (tot + sizes * active)[:, None]
+        ent_add = -jnp.sum(jnp.where(num > 0, (num / den) *
+                                     jnp.log(jnp.clip(num / den, 1e-12,
+                                                      None)), 0.0), axis=-1)
+        cand = jnp.where((mask == 0) & (active > 0), ent_add, -jnp.inf)
+        best = jnp.argmax(cand)
+        return mask.at[best].set(1.0), None
+
+    mask, _ = jax.lax.scan(add_one, jnp.zeros((m,), jnp.float32), None,
+                           length=budget)
+    ent = group_entropy(soft_labels, sizes, mask)
+    removed = (jnp.sum(active) - jnp.sum(mask)).astype(jnp.int32)
+    return JudgmentResult(mask=mask, entropy=ent,
+                          initial_entropy=init_ent, num_removed=removed)
+
+
+def judge_np(
+    soft_labels: np.ndarray,
+    sizes: np.ndarray,
+    active: np.ndarray | None = None,
+) -> tuple[list[int], list[int], float]:
+    """Literal Algorithm 1. Returns (A, R, final_entropy) with device indices.
+
+    Per paper lines 2-19: iteratively find the single member whose removal
+    maximises getEntropy of the remainder; move it from A to R; stop when no
+    removal strictly improves the entropy (line 13-14).
+    """
+    soft_labels = np.asarray(soft_labels, np.float64)
+    sizes = np.asarray(sizes, np.float64)
+    m = soft_labels.shape[0]
+    if active is None:
+        active_idx = list(range(m))
+    else:
+        active_idx = [i for i in range(m) if active[i] > 0]
+
+    A = list(active_idx)
+    R: list[int] = []
+    mask = np.zeros(m)
+    mask[A] = 1.0
+    ent = group_entropy_np(soft_labels, sizes, mask)
+    while len(A) > 1:
+        best_k, best_ent = None, ent
+        for k in A:  # paper line 5: sweep candidates
+            trial = mask.copy()
+            trial[k] = 0.0
+            e = group_entropy_np(soft_labels, sizes, trial)
+            if e > best_ent + _TOL:
+                best_k, best_ent = k, e
+        if best_k is None:  # line 13: no harmful device left
+            break
+        A.remove(best_k)
+        R.append(best_k)
+        mask[best_k] = 0.0
+        ent = best_ent
+    return A, R, ent

@@ -1,0 +1,112 @@
+"""Maximum-entropy judgment sweep kernel (Pallas, TPU target).
+
+THE paper's hot loop, expressed as a kernel: given per-device soft labels
+P (M, C), sizes L (M,) and the active mask, compute in ONE streaming pass
+over the class axis both
+
+  * the weighted group entropy of the active set (Eq. 3/4), and
+  * all M leave-one-out entropies (Alg. 1 lines 5-12, vectorized),
+
+i.e. everything one greedy iteration of Algorithm 1 needs. The class axis
+is tiled (block_c wide) so a 256k-class soft-label matrix streams through
+VMEM while the (M+1,) entropy accumulators persist in scratch — the
+judgment cost is O(M*C) per iteration with C never materialized in fp32
+beyond one tile.
+
+VMEM per step: (M, block_c) tile + (M+1,) accumulators ~= 32*512*4 B
+~= 64 KiB.
+
+Validated against ref.entropy_judge_sweep_reference in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+
+def _judge_kernel(p_ref, w_ref, tot_ref, den_ref, out_ref, acc_ref, *,
+                  block_c: int, num_classes: int):
+    ci = pl.program_id(0)
+    nc = pl.num_programs(0)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p = p_ref[...].astype(jnp.float32)            # (M, bc)
+    w = w_ref[...].astype(jnp.float32)            # (M,)
+    tot = tot_ref[0]                              # ()
+    den = den_ref[...]                            # (M,) tot - w_k (>=eps)
+
+    c_idx = ci * block_c + jax.lax.broadcasted_iota(
+        jnp.int32, (p.shape[0], block_c), 1)
+    valid = c_idx < num_classes
+    pw = jnp.where(valid, p * w[:, None], 0.0)    # (M, bc)
+    s = jnp.sum(pw, axis=0)                       # (bc,) weighted sum
+
+    def plogp(q):
+        return jnp.where(q > 0, q * jnp.log(jnp.maximum(q, _EPS)), 0.0)
+
+    # group entropy contribution
+    qg = s / jnp.maximum(tot, _EPS)
+    acc_ref[0] += -jnp.sum(plogp(qg))
+
+    # leave-one-out: q_k = (s - w_k p_k) / (tot - w_k)
+    loo = (s[None, :] - pw) / den[:, None]
+    acc_ref[1:] += -jnp.sum(plogp(loo), axis=1)
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        out_ref[...] = acc_ref[...]
+
+
+def entropy_judge_sweep(
+    soft_labels: jax.Array,    # (M, C)
+    sizes: jax.Array,          # (M,)
+    mask: jax.Array,           # (M,)
+    *,
+    block_c: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (group_entropy (), leave_one_out (M,)) matching
+    core.entropy semantics (emptying removals -> -1.0)."""
+    m, c = soft_labels.shape
+    w = (jnp.asarray(sizes, jnp.float32) * jnp.asarray(mask, jnp.float32))
+    tot = jnp.sum(w)
+    den = jnp.maximum(tot - w, _EPS)
+
+    block_c = min(block_c, c)
+    pad = (block_c - c % block_c) % block_c
+    p = soft_labels
+    if pad:
+        p = jnp.pad(p, ((0, 0), (0, pad)))
+    nc = p.shape[1] // block_c
+
+    kernel = functools.partial(_judge_kernel, block_c=block_c,
+                               num_classes=c)
+    from jax.experimental.pallas import tpu as pltpu
+    out = pl.pallas_call(
+        kernel,
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec((m, block_c), lambda ci: (0, ci)),
+            pl.BlockSpec((m,), lambda ci: (0,)),
+            pl.BlockSpec((1,), lambda ci: (0,)),
+            pl.BlockSpec((m,), lambda ci: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m + 1,), lambda ci: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m + 1,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m + 1,), jnp.float32)],
+        interpret=interpret,
+    )(p, w, tot[None], den)
+
+    ent = out[0]
+    loo = jnp.where(tot - w > _EPS, out[1:], -1.0)
+    # empty active set -> uniform/max-entropy convention of the reference
+    ent = jnp.where(tot > 0, ent, jnp.log(jnp.asarray(c, jnp.float32)))
+    return ent, loo

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers for the kernel package with backend dispatch.
+
+backend="xla"     — pure-jnp reference implementations (CPU, dry-run).
+backend="pallas"  — Pallas TPU kernels (validated on CPU via interpret=True;
+                    Mosaic-lowered on real TPUs).
+
+``set_default_backend`` flips the global default (used by tests and by the
+launcher's --kernels flag).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+
+_DEFAULT = "xla"
+_INTERPRET = True  # no TPU in this container; real deployments set False
+
+
+def set_default_backend(name: str, interpret: bool | None = None) -> None:
+    global _DEFAULT, _INTERPRET
+    assert name in ("xla", "pallas", "blockwise")
+    _DEFAULT = name
+    if interpret is not None:
+        _INTERPRET = interpret
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0,
+              kv_positions=None, scale=None, backend=None):
+    backend = backend or _DEFAULT
+    if backend == "pallas" and q.shape[1] == 1 and kv_positions is not None:
+        from .decode_attention import decode_attention
+        import jax.numpy as jnp
+        idx = jnp.max(kv_positions)   # current position = newest slot tag
+        return decode_attention(q, k, v, kv_positions, idx, window=window,
+                                scale=scale, interpret=_INTERPRET)
+    if backend == "pallas" and q.shape[1] > 1:
+        from .flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, interpret=_INTERPRET)
+    if backend == "blockwise" and k.shape[1] > 512:
+        return ref.mha_blockwise(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset,
+                                 kv_positions=kv_positions, scale=scale)
+    return ref.mha_reference(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, kv_positions=kv_positions,
+                             scale=scale)
+
+
+def ssd(x, dt, a, b_mat, c_mat, *, chunk=256, init_state=None, backend=None):
+    backend = backend or _DEFAULT
+    if backend == "pallas":
+        from .ssd_scan import ssd_chunked
+        return ssd_chunked(x, dt, a, b_mat, c_mat, chunk=chunk,
+                           init_state=init_state, interpret=_INTERPRET)
+    if x.shape[1] == 1:   # single-token: exact sequential step
+        return ref.ssd_reference(x, dt, a, b_mat, c_mat,
+                                 init_state=init_state)
+    return ref.ssd_chunked_reference(x, dt, a, b_mat, c_mat, chunk=chunk,
+                                     init_state=init_state)
+
+
+def entropy_judge_sweep(soft_labels, sizes, mask, *, backend=None):
+    backend = backend or _DEFAULT
+    if backend == "pallas":
+        from .entropy_judge import entropy_judge_sweep
+        return entropy_judge_sweep(soft_labels, sizes, mask,
+                                   interpret=_INTERPRET)
+    return ref.entropy_judge_sweep_reference(soft_labels, sizes, mask)

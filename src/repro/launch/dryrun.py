@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) lowers,
+compiles, and fits — without TPU hardware.
+
+For each combination this driver builds the production mesh (16x16 single
+pod / 2x16x16 multi-pod over 512 forced host devices), constructs the
+FedEntropy train step (train shapes) or the serving prefill/decode step
+(inference shapes) with full param/optimizer/cache shardings, then runs
+``jax.jit(...).lower(**specs).compile()`` and records:
+
+  * compiled.memory_analysis()  — per-device bytes (does it fit 16 GB?)
+  * compiled.cost_analysis()    — XLA's aggregate (loop bodies counted 1x)
+  * loop-aware HLO walk         — FLOPs / HBM bytes / collective bytes with
+                                  while trip counts applied (hlo_analysis)
+  * MODEL_FLOPS = 6·N_active·D  — analytic useful compute for the ratio
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --multi-pod --out results.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, ASSIGNED, SHAPES
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.distributed import (
+    FedSpec, cache_logical_axes, make_serve_steps, make_train_step,
+    param_logical_axes,
+)
+from ..models.api import (
+    attn_cache_len, build_model, decode_window, input_specs, supported,
+)
+from ..optim import sgd
+from ..sharding.ctx import use_mesh
+from ..sharding.specs import logical_to_pspec, tree_shardings
+from .hlo_analysis import analyze_hlo_text
+from .mesh import fl_clients_for, make_production_mesh
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+def _merged_rules(rules):
+    from ..sharding.specs import DEFAULT_RULES
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    return merged
+
+
+def batch_logical(cfg: ModelConfig, specs: dict) -> dict:
+    """Logical axes for each batch input."""
+    out = {}
+    for k, v in specs.items():
+        if k == "tokens":
+            out[k] = ("batch", None)
+        elif k in ("patches", "frames"):
+            out[k] = ("batch", None, None)
+        elif k == "cache":
+            out[k] = cache_logical_axes(v)
+        else:
+            out[k] = (None,) * len(v.shape)
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig,
+                params_shape) -> float:
+    """6*N_active*D (train) / 2*N_active*D (inference) analytic FLOPs,
+    N = non-embedding active params (+ the LM-head matmul counted via the
+    head/tied-embedding table)."""
+    total_active = 0
+    head_flops_per_tok = 2 * cfg.d_model * cfg.padded_vocab
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        names = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path)
+        if names[-2:] == ("tok", "embed") or names[-2:] == ("tok", "head"):
+            continue
+        n = int(np.prod(leaf.shape))
+        if "moe" in names and names[-1] in ("w_in", "w_gate", "w_out"):
+            n = n // cfg.num_experts * cfg.experts_per_token
+        total_active += n
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * total_active * tokens + mult / 2 * head_flops_per_tok * \
+        tokens
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+              mesh=None, save_hlo: str | None = None,
+              attn: str = "xla", chunked_head: bool = False,
+              remat: str | None = None,
+              capacity_factor: float | None = None,
+              seq_rule: bool = False,
+              kv_time_rule: bool = False) -> dict[str, Any]:
+    """attn/chunked_head/remat/capacity_factor/seq_rule are the §Perf
+    hillclimbing knobs; defaults reproduce the baseline."""
+    cfg = ARCHS[arch]
+    if remat is not None:
+        cfg = cfg.replace(remat=remat)
+    if capacity_factor is not None:
+        cfg = cfg.replace(moe_capacity_factor=capacity_factor)
+    shape = SHAPES[shape_name]
+    rec: dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "multi_pod": multi_pod,
+                           "variant": {"attn": attn,
+                                       "chunked_head": chunked_head,
+                                       "remat": cfg.remat,
+                                       "cf": cfg.moe_capacity_factor,
+                                       "seq_rule": seq_rule,
+                                       "kv_time_rule": kv_time_rule}}
+    ok, why = supported(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    from ..kernels import ops as kops
+    kops.set_default_backend("xla" if attn == "xla" else attn)
+
+    t0 = time.time()
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    model = build_model(cfg)
+    window = decode_window(cfg, shape)
+    rules = {}
+    if seq_rule:   # sequence-parallel attention activations ("model" axis)
+        rules["seq"] = ("model",)
+    if kv_time_rule:   # shard the KV-cache time dim over "model" (decode
+        rules["kv_time"] = ("model",)   # with kv_heads % model != 0)
+    rules = rules or None
+
+    params_shape = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    p_axes = param_logical_axes(params_shape)
+    p_sh = tree_shardings(p_axes, params_shape, mesh)
+    specs = input_specs(cfg, shape)
+    b_axes = batch_logical(cfg, specs)
+    b_sh = jax.tree.map(
+        lambda ax, s: NamedSharding(
+            mesh, logical_to_pspec(ax, s.shape, mesh, _merged_rules(rules))),
+        b_axes, specs, is_leaf=lambda x: isinstance(x, tuple))
+
+    with mesh, use_mesh(mesh, rules):
+        if shape.kind == "train":
+            fed = FedSpec(num_clients=fl_clients_for(mesh),
+                          chunked_head=chunked_head)
+            opt = sgd(lr=0.01, momentum=0.5)
+            step = make_train_step(model, opt, fed)
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            o_axes = {"mu": p_axes, "count": ()}
+            o_sh = tree_shardings(o_axes, opt_shape, mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shape, opt_shape, specs)
+        elif shape.kind == "prefill":
+            prefill_step, _ = make_serve_steps(model, window=window)
+            jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_shape, specs)
+        else:  # decode
+            _, decode_step = make_serve_steps(model, window=window)
+            cache_spec = specs["cache"]
+            cache_sh = b_sh["cache"]
+            tok_sh = b_sh["tokens"]
+            jitted = jax.jit(decode_step,
+                             in_shardings=(p_sh, cache_sh, tok_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_shape, cache_spec,
+                                   specs["tokens"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo_text)
+    hlo = analyze_hlo_text(hlo_text)
+
+    mf = model_flops(cfg, shape, params_shape)
+    per_dev_flops = hlo["flops"]
+    compute_s = per_dev_flops / PEAK_FLOPS
+    memory_s = hlo["hbm_bytes"] / HBM_BW
+    coll_s = hlo["collective_bytes_total"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+
+    rec.update({
+        "status": "ok",
+        "mesh": dict(mesh.shape),
+        "num_devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": _mem_dict(mem),
+        "cost_analysis_flops": float(ca.get("flops", 0.0)),
+        "cost_analysis_bytes": float(ca.get("bytes accessed", 0.0)),
+        "hlo_flops_per_device": per_dev_flops,
+        "hlo_hbm_bytes_per_device": hlo["hbm_bytes"],
+        "collective_bytes": hlo["collective_bytes"],
+        "collective_counts": hlo["collective_counts"],
+        "collective_bytes_total": hlo["collective_bytes_total"],
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / max(per_dev_flops * n_dev, 1.0),
+        "roofline": dict(terms, dominant=dominant),
+    })
+    return rec
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] != "ok":
+        return f"{r['arch']:24s} {r['shape']:12s} SKIP  ({r['reason'][:60]})"
+    t = r["roofline"]
+    mem = r["memory_analysis"]
+    per_dev_gb = (mem.get("argument_size_in_bytes", 0) +
+                  mem.get("temp_size_in_bytes", 0)) / 2**30
+    return (f"{r['arch']:24s} {r['shape']:12s} "
+            f"cmp={t['compute_s']*1e3:9.2f}ms "
+            f"mem={t['memory_s']*1e3:9.2f}ms "
+            f"col={t['collective_s']*1e3:9.2f}ms "
+            f"dom={t['dominant'][:-2]:10s} "
+            f"useful={r['useful_flops_ratio']*100:5.1f}% "
+            f"dev={per_dev_gb:6.2f}GiB "
+            f"compile={r['compile_s']:.0f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="input shape or 'all'")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 (512-chip) mesh")
+    ap.add_argument("--out", default="", help="write JSON records here")
+    ap.add_argument("--save-hlo", default="",
+                    help="directory to dump compiled HLO text per combo")
+    ap.add_argument("--attn", default="xla",
+                    choices=["xla", "blockwise"],
+                    help="attention impl (blockwise = flash-style scan)")
+    ap.add_argument("--chunked-head", action="store_true",
+                    help="stream vocab head in seq chunks")
+    ap.add_argument("--remat", default=None,
+                    choices=[None, "none", "full", "dots"])
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--seq-rule", action="store_true",
+                    help="shard attention activations' seq dim over model")
+    ap.add_argument("--kv-time-rule", action="store_true",
+                    help="shard KV-cache time dim over model (decode)")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            hlo_path = (os.path.join(
+                args.save_hlo, f"{arch}_{shape}"
+                f"{'_mp' if args.multi_pod else ''}.hlo")
+                if args.save_hlo else None)
+            try:
+                r = run_combo(arch, shape, multi_pod=args.multi_pod,
+                              save_hlo=hlo_path, attn=args.attn,
+                              chunked_head=args.chunked_head,
+                              remat=args.remat,
+                              capacity_factor=args.capacity_factor,
+                              seq_rule=args.seq_rule,
+                              kv_time_rule=args.kv_time_rule)
+            except Exception as e:  # a failure here is a bug in the system
+                r = {"arch": arch, "shape": shape, "status": "error",
+                     "multi_pod": args.multi_pod,
+                     "error": f"{type(e).__name__}: {e}",
+                     "trace": traceback.format_exc()[-2000:]}
+            records.append(r)
+            if r["status"] == "error":
+                print(f"{arch:24s} {shape:12s} ERROR {r['error'][:90]}",
+                      flush=True)
+            else:
+                print(fmt_row(r), flush=True)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {len(records)} records to {args.out}")
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"== {n_ok} ok / {n_skip} skipped / {n_err} errors ==")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

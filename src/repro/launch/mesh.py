@@ -1,0 +1,32 @@
+"""Production mesh builders (functions only — importing this module never
+touches jax device state).
+
+Single pod : (16, 16)        axes ("data", "model")   = 256 chips (v5e pod)
+Multi-pod  : (2, 16, 16)     axes ("pod", "data", "model") = 512 chips
+
+The dry-run forces 512 host devices via XLA_FLAGS *before* any jax import
+(see dryrun.py); real deployments get the same shapes from the TPU slice.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist — used by tests/examples."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def fl_clients_for(mesh: Mesh) -> int:
+    """One FL client group per ("pod","data") mesh row."""
+    m = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    return max(m, 1)

@@ -1,0 +1,2 @@
+from . import api, attention, cnn, encdec, layers, moe, ssm, transformer
+from .api import Model, build_model, input_specs

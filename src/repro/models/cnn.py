@@ -1,0 +1,59 @@
+"""The paper's CNN (Appendix Table 5) — LeNet-style, pure functional JAX.
+
+conv5x5(6) -> maxpool2 -> conv5x5(16) -> maxpool2 -> FC(120) -> FC(84)
+-> FC(num_classes).  ``apply`` returns (logits, features) where features is
+the penultimate (84-d) representation — used by Moon's contrastive term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((cout,))}
+
+
+def _dense_init(key, din, dout):
+    w = jax.random.normal(key, (din, dout)) * jnp.sqrt(2.0 / din)
+    return {"w": w, "b": jnp.zeros((dout,))}
+
+
+def init(key: jax.Array, image_hw: int = 32, channels: int = 3,
+         num_classes: int = 10) -> dict:
+    k = jax.random.split(key, 5)
+    h = (image_hw - 4) // 2        # after conv1 + pool
+    h = (h - 4) // 2               # after conv2 + pool
+    flat = h * h * 16
+    return {
+        "conv1": _conv_init(k[0], 5, 5, channels, 6),
+        "conv2": _conv_init(k[1], 5, 5, 6, 16),
+        "fc1": _dense_init(k[2], flat, 120),
+        "fc2": _dense_init(k[3], 120, 84),
+        "fc3": _dense_init(k[4], 84, num_classes),
+    }
+
+
+def _conv(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply(params: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, H, W, C) float -> (logits (B, classes), features (B, 84))."""
+    h = _pool(jax.nn.relu(_conv(params["conv1"], x)))
+    h = _pool(jax.nn.relu(_conv(params["conv2"], h)))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    feats = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+    logits = feats @ params["fc3"]["w"] + params["fc3"]["b"]
+    return logits, feats

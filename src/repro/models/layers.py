@@ -1,0 +1,153 @@
+"""Shared neural-net building blocks (pure functional, dict params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.ctx import shard_act
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ------------------------------------------------------------------ norms
+
+def norm_init(cfg: ModelConfig, dim: int) -> dict:
+    p = {"scale": jnp.ones((dim,), pdtype_of(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), pdtype_of(cfg))
+    return p
+
+
+def norm_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ linear
+
+def dense_init(key, cfg: ModelConfig, din: int, dout: int,
+               bias: bool = False, scale: float | None = None) -> dict:
+    std = scale if scale is not None else din ** -0.5
+    p = {"w": (jax.random.normal(key, (din, dout)) * std).astype(
+        pdtype_of(cfg))}
+    if bias:
+        p["b"] = jnp.zeros((dout,), pdtype_of(cfg))
+    return p
+
+
+def dense_apply(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ------------------------------------------------------------------ MLP
+
+def mlp_init(key, cfg: ModelConfig, d: int, f: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_in": dense_init(k1, cfg, d, f, bias=cfg.attn_bias and
+                            cfg.family == "encdec"),
+         "w_out": dense_init(k2, cfg, f, d)}
+    if cfg.activation in ("silu", "geglu"):   # gated
+        p["w_gate"] = dense_init(k3, cfg, d, f)
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = dense_apply(p["w_in"], x)
+    if cfg.activation == "silu":
+        h = jax.nn.silu(dense_apply(p["w_gate"], x)) * h
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(dense_apply(p["w_gate"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard_act(h, ("batch", "seq", "ffn"))
+    return dense_apply(p["w_out"], h)
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope_freqs(head_dim: int, rot_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2,
+                                       dtype=jnp.float32) / rot_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               style: str = "full") -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int. style full|half|none.
+
+    ``half`` is ChatGLM's 2d RoPE: only the first head_dim/2 channels
+    rotate, the rest pass through.
+    """
+    if style == "none":
+        return x
+    hd = x.shape[-1]
+    rot = hd if style == "full" else hd // 2
+    freqs = rope_freqs(hd, rot, theta)                       # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    out = jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+    return out
+
+
+# ------------------------------------------------------------------ embed
+
+def embed_init(key, cfg: ModelConfig) -> dict:
+    v = cfg.padded_vocab
+    p = {"embed": (jax.random.normal(key, (v, cfg.d_model)) *
+                   cfg.d_model ** -0.5).astype(pdtype_of(cfg))}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["head"] = (jax.random.normal(k2, (cfg.d_model, v)) *
+                     cfg.d_model ** -0.5).astype(pdtype_of(cfg))
+    return p
+
+
+def embed_apply(cfg: ModelConfig, p: dict, tokens: jax.Array) -> jax.Array:
+    x = p["embed"].astype(dtype_of(cfg))[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard_act(x, ("batch", "seq", "embed"))
+
+
+def logits_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ p["embed"].astype(x.dtype).T
+    else:
+        logits = x @ p["head"].astype(x.dtype)
+    logits = shard_act(logits, ("batch", "seq", "vocab"))
+    # mask padded vocab entries
+    v = cfg.padded_vocab
+    if v != cfg.vocab_size:
+        mask = jnp.arange(v) < cfg.vocab_size
+        logits = jnp.where(mask, logits, jnp.asarray(-1e9, logits.dtype))
+    return logits

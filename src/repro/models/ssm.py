@@ -1,0 +1,138 @@
+"""Mamba2 (SSD — state-space duality) block [arXiv:2405.21060], TPU-adapted.
+
+Projection layout follows the Mamba2 reference: one fused in_proj produces
+(z, x, B, C, dt); a short causal conv runs over (x, B, C); the SSD recurrence
+y_t = C_t . h_t,  h_t = exp(dt_t A) h_{t-1} + dt_t x_t (x) B_t is evaluated
+either chunk-parallel (kernels.ops.ssd -> Pallas on TPU) or sequentially
+(decode: O(1) state update carried in the cache).
+
+Cache per layer: {"conv": (B, ssm_conv-1, conv_ch), "state": (B, H, P, N)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from ..sharding.ctx import shard_act
+from .layers import dense_apply, dense_init, pdtype_of, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_inner                       # expand * d_model
+    heads = d_in // cfg.ssm_headdim
+    n = cfg.ssm_state
+    g = cfg.ssm_ngroups
+    conv_ch = d_in + 2 * g * n                 # conv over (x, B, C)
+    proj = 2 * d_in + 2 * g * n + heads        # z, x, B, C, dt
+    return d_in, heads, n, g, conv_ch, proj
+
+
+def ssm_init(key, cfg: ModelConfig) -> dict:
+    d_in, heads, n, g, conv_ch, proj = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (heads,)) *
+                 (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    # inverse softplus so softplus(dt_bias) == dt at init
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(ks[0], cfg, cfg.d_model, proj),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) *
+                   (cfg.ssm_conv ** -0.5)).astype(pdtype_of(cfg)),
+        "conv_b": jnp.zeros((conv_ch,), pdtype_of(cfg)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((d_in,), pdtype_of(cfg)),
+        "out_proj": dense_init(ks[3], cfg, d_in, cfg.d_model),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, heads, n, g, _, _ = _dims(cfg)
+    z, xc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * g * n], axis=-1)
+    return z, xc, dt                           # xc = conv channels (x,B,C)
+
+
+def _split_conv(cfg, xc):
+    d_in, heads, n, g, _, _ = _dims(cfg)
+    x, b_mat, c_mat = jnp.split(xc, [d_in, d_in + g * n], axis=-1)
+    return x, b_mat, c_mat
+
+
+def _causal_conv(w, bias, x):
+    """Depthwise causal conv over (B, L, C) with taps (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None].astype(x.dtype)
+              for i in range(k))
+    return jax.nn.silu(out + bias.astype(x.dtype))
+
+
+def ssm_block(cfg: ModelConfig, p: dict, u: jax.Array) -> jax.Array:
+    """Full-sequence SSD (train / prefill). u: (B, L, d_model)."""
+    d_in, heads, n, g, _, _ = _dims(cfg)
+    bsz, l, _ = u.shape
+    zxbcdt = dense_apply(p["in_proj"], u)
+    z, xc, dt = _split_proj(cfg, zxbcdt)
+    xc = _causal_conv(p["conv_w"], p["conv_b"], xc)
+    x, b_mat, c_mat = _split_conv(cfg, xc)
+
+    x = shard_act(x.reshape(bsz, l, heads, cfg.ssm_headdim),
+                  ("batch", "seq", "ssm_inner", None))
+    b_mat = b_mat.reshape(bsz, l, g, n)
+    c_mat = c_mat.reshape(bsz, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+
+    y, _ = ops.ssd(x, dt, a, b_mat, c_mat, chunk=cfg.ssm_chunk)
+    y = y + x * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, l, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = dense_apply(p["out_proj"], y)
+    return shard_act(out, ("batch", "seq", "embed"))
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_in, heads, n, g, conv_ch, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, heads, cfg.ssm_headdim, n), jnp.float32),
+    }
+
+
+def ssm_decode_step(cfg: ModelConfig, p: dict, u: jax.Array,
+                    cache: dict) -> tuple[jax.Array, dict]:
+    """One-token recurrent step. u: (B, 1, d_model)."""
+    d_in, heads, n, g, conv_ch, _ = _dims(cfg)
+    bsz = u.shape[0]
+    zxbcdt = dense_apply(p["in_proj"], u)
+    z, xc, dt = _split_proj(cfg, zxbcdt)
+
+    # conv with carried window: (B, K-1, C) ++ current -> take last output
+    hist = jnp.concatenate([cache["conv"], xc], axis=1)     # (B, K, C)
+    w = p["conv_w"].astype(xc.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(
+        xc.dtype)
+    xc1 = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = hist[:, 1:, :]
+
+    x, b_mat, c_mat = _split_conv(cfg, xc1)
+    x = x.reshape(bsz, heads, cfg.ssm_headdim)
+    b_mat = jnp.repeat(b_mat.reshape(bsz, g, n), heads // g, axis=1)
+    c_mat = jnp.repeat(c_mat.reshape(bsz, g, n), heads // g, axis=1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+
+    decay = jnp.exp(dt1 * a[None, :])                        # (B, H)
+    upd = (dt1[..., None] * x.astype(jnp.float32))[..., None] * \
+        b_mat.astype(jnp.float32)[:, :, None, :]             # (B,H,P,N)
+    state = decay[..., None, None] * cache["state"] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state,
+                   c_mat.astype(jnp.float32)).astype(u.dtype)
+    y = y + x * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = dense_apply(p["out_proj"], y)
+    return out, {"conv": new_conv, "state": state}

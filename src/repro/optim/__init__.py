@@ -1,0 +1,1 @@
+from .optim import Optimizer, adamw, sgd

@@ -1,0 +1,78 @@
+"""Pure-pytree optimizers (no optax in this environment).
+
+``sgd``   — SGD with (optionally Nesterov-free) momentum; the paper's local
+            optimizer (lr 0.01, momentum 0.5) and the default for the
+            mesh-scale FL driver (momentum state is the only extra copy,
+            which is what lets kimi-k2 fit FSDP-sharded).
+``adamw`` — AdamW for non-FL baselines and fine-tuning examples.
+
+Each factory returns ``Optimizer(init, update)`` where
+``update(grads, state, params) -> (new_params, new_state)``.
+State trees mirror the param tree, so param shardings apply verbatim.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def sgd(lr: float = 0.01, momentum: float = 0.5,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"count": jnp.zeros((), jnp.int32)}
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype),
+                grads, params)
+        if momentum == 0.0:
+            new_p = jax.tree.map(
+                lambda p, g: p - (lr * g).astype(p.dtype), params, grads)
+            return new_p, {"count": state["count"] + 1}
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                          state["mu"], grads)
+        new_p = jax.tree.map(lambda p, m: p - (lr * m).astype(p.dtype),
+                             params, mu)
+        return new_p, {"mu": mu, "count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) *
+                         g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def step(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return p - (lr * upd).astype(p.dtype)
+        new_p = jax.tree.map(step, params, m, v)
+        return new_p, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)

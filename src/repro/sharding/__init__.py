@@ -1,0 +1,2 @@
+from .ctx import ShardingCtx, current, shard_act, use_mesh
+from .specs import DEFAULT_RULES, logical_to_pspec, tree_shardings

@@ -1,0 +1,55 @@
+"""Activation-sharding context.
+
+Model code annotates hot activations with ``shard_act(x, ("batch", "seq",
+"embed"))``. Outside a distribution context (unit tests, the vmapped FL
+simulator) this is the identity; inside ``use_mesh(mesh)`` it becomes
+``jax.lax.with_sharding_constraint`` with the divisibility-aware rule table.
+This keeps model definitions mesh-agnostic while giving the dry-run full
+control of activation layouts.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .specs import DEFAULT_RULES, logical_to_pspec
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding_ctx", default=None)
+
+
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, rules: dict | None = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def constraint(self, x, logical: Sequence[Optional[str]]):
+        spec = logical_to_pspec(logical, x.shape, self.mesh, self.rules)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict | None = None):
+    tok = _CTX.set(ShardingCtx(mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current() -> Optional[ShardingCtx]:
+    return _CTX.get()
+
+
+def shard_act(x, logical: Sequence[Optional[str]]):
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    return ctx.constraint(x, logical)

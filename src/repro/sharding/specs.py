@@ -1,0 +1,73 @@
+"""Divisibility-aware logical->mesh sharding rules.
+
+Every tensor dimension carries a *logical axis name*; the rule table maps
+names to (tuples of) mesh axes. A mesh axis is applied only if it divides
+the dimension — otherwise we retry with a shorter prefix and finally
+replicate. This is what lets one rule table cover kv=2 (replicated on a
+16-way "model" axis) and kv=16 (sharded) without per-arch special cases.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (tried longest-prefix-first)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fl_clients": ("pod", "data"),
+    "seq": (),
+    "embed": ("pod", "data"),        # FSDP axis for params
+    "vocab": ("model",),
+    "heads": ("model",),             # fused num_heads*head_dim dims
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "capacity": ("pod", "data"),
+    "ssm_inner": ("model",),
+    "ssm_state": (),
+    "frames": (),
+    "kv_time": (),
+    None: (),
+}
+
+
+def _axes_for(dim: int, names: Sequence[str], mesh: Mesh) -> Optional[tuple]:
+    """Longest prefix of mesh axes whose product divides ``dim``."""
+    live = [n for n in names if n in mesh.shape]
+    for end in range(len(live), 0, -1):
+        pick = live[:end]
+        prod = int(np.prod([mesh.shape[n] for n in pick]))
+        if prod > 1 and dim % prod == 0:
+            return tuple(pick) if len(pick) > 1 else pick[0]
+    return None
+
+
+def logical_to_pspec(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: dict | None = None,
+) -> P:
+    rules = rules or DEFAULT_RULES
+    parts, used = [], set()
+    for dim, name in zip(shape, logical):
+        cand = rules.get(name, ())
+        cand = tuple(a for a in cand if a not in used)
+        ax = _axes_for(dim, cand, mesh) if cand else None
+        if ax is not None:
+            used.update(ax if isinstance(ax, tuple) else (ax,))
+        parts.append(ax)
+    return P(*parts)
+
+
+def tree_shardings(logical_tree, shape_tree, mesh: Mesh, rules=None):
+    """Map a tree of logical-axis tuples + matching ShapeDtypeStructs to
+    NamedShardings."""
+    def one(logical, sds):
+        return NamedSharding(
+            mesh, logical_to_pspec(logical, sds.shape, mesh, rules))
+    return jax.tree.map(one, logical_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,13 @@
+import os
+
+# Tests run against the single real CPU device (the dry-run — and ONLY the
+# dry-run — forces 512 host devices via its own module-level XLA_FLAGS).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

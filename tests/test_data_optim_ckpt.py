@@ -1,0 +1,162 @@
+"""Data partitioners (paper Sec. 4.1 heterogeneity cases), optimizers,
+checkpointing, sharding rules, HLO analyzer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import restore, save
+from repro.data.partition import (
+    label_histogram, partition, stack_clients,
+)
+from repro.data.synthetic import make_image_dataset, make_token_dataset
+from repro.optim import adamw, sgd
+
+
+@pytest.fixture(scope="module")
+def image_data():
+    (x, y), _ = make_image_dataset(num_classes=10, train_per_class=100,
+                                   test_per_class=10, hw=8)
+    return x, y
+
+
+def test_case1_single_label(image_data):
+    x, y = image_data
+    parts = partition("case1", y, 20, 10)
+    hist = label_histogram(y, parts, 10)
+    assert np.all((hist > 0).sum(axis=1) == 1)       # exactly one label
+
+
+def test_case2_two_labels_even(image_data):
+    x, y = image_data
+    parts = partition("case2", y, 20, 10)
+    hist = label_histogram(y, parts, 10)
+    assert np.all((hist > 0).sum(axis=1) == 2)
+    nz = hist[hist > 0].reshape(20, 2)
+    np.testing.assert_array_equal(nz[:, 0], nz[:, 1])  # evenly split
+
+
+def test_case3_dirichlet_heterogeneous(image_data):
+    x, y = image_data
+    parts = partition("case3", y, 20, 10, beta=0.1)
+    hist = label_histogram(y, parts, 10).astype(np.float64)
+    # no client lost; all samples assigned at most once
+    total = sum(len(p) for p in parts)
+    assert total <= len(y)
+    assert min(len(p) for p in parts) >= 2
+    # beta=0.1 must give skewed clients: dominant label > 50% on average
+    frac = (hist.max(axis=1) / np.clip(hist.sum(axis=1), 1, None)).mean()
+    assert frac > 0.5
+
+
+def test_partitions_are_disjoint(image_data):
+    x, y = image_data
+    for case in ("case1", "case2", "case3"):
+        parts = partition(case, y, 10, 10)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == len(set(allidx.tolist()))
+
+
+def test_stack_clients_padding(image_data):
+    x, y = image_data
+    parts = partition("case3", y, 10, 10, beta=0.2)
+    data = stack_clients(x, y, parts, batch_multiple=16)
+    assert data["x"].shape[1] % 16 == 0
+    for i, p in enumerate(parts):
+        assert data["w"][i].sum() == len(p)
+        np.testing.assert_array_equal(
+            data["y"][i][: len(p)], y[p])
+
+
+def test_token_dataset_domain_skew():
+    x, dom = make_token_dataset(vocab_size=256, num_domains=4,
+                                docs_per_domain=16, seq_len=64)
+    # different domains -> visibly different token histograms
+    h0 = np.bincount(x[dom == 0].ravel(), minlength=256)
+    h1 = np.bincount(x[dom == 1].ravel(), minlength=256)
+    cos = (h0 @ h1) / (np.linalg.norm(h0) * np.linalg.norm(h1))
+    assert cos < 0.9
+
+
+# ------------------------------------------------------------------ optim
+
+def test_sgd_momentum_matches_manual(rng):
+    opt = sgd(lr=0.1, momentum=0.5)
+    p = {"w": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    st_ = opt.init(p)
+    p1, st_ = opt.update(g, st_, p)
+    p2, st_ = opt.update(g, st_, p1)
+    # manual: m1 = g ; m2 = .5 g + g
+    manual1 = np.asarray(p["w"]) - 0.1 * np.asarray(g["w"])
+    manual2 = manual1 - 0.1 * 1.5 * np.asarray(g["w"])
+    np.testing.assert_allclose(np.asarray(p1["w"]), manual1, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p2["w"]), manual2, rtol=1e-6)
+
+
+def test_adamw_descends_quadratic():
+    opt = adamw(lr=0.1)
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        p, state = opt.update(g, state, p)
+    assert float(jnp.abs(p["w"]).max()) < 0.1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1e-4, 0.5), st.floats(0.0, 0.95))
+def test_property_sgd_step_size_scales(lr, momentum):
+    opt = sgd(lr=lr, momentum=momentum)
+    p = {"w": jnp.ones((3,))}
+    g = {"w": jnp.ones((3,))}
+    p1, _ = opt.update(g, opt.init(p), p)
+    np.testing.assert_allclose(np.asarray(p1["w"]), 1.0 - lr, rtol=1e-5)
+
+
+# ------------------------------------------------------------------ ckpt
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    tree = {"a": {"b": jnp.asarray(rng.normal(size=(3, 4)), jnp.float32)},
+            "c": jnp.arange(5, dtype=jnp.int32)}
+    save(str(tmp_path), 7, tree, meta={"note": "x"})
+    save(str(tmp_path), 9, jax.tree.map(lambda x: x + 1, tree))
+    restored, meta, step = restore(str(tmp_path), tree)
+    assert step == 9
+    np.testing.assert_allclose(np.asarray(restored["a"]["b"]),
+                               np.asarray(tree["a"]["b"]) + 1)
+
+
+def test_checkpoint_retention(tmp_path):
+    tree = {"w": jnp.zeros((2,))}
+    for s in range(6):
+        save(str(tmp_path), s, tree, keep=3)
+    files = sorted(os.listdir(tmp_path))
+    assert len([f for f in files if f.endswith(".npz")]) == 3
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save(str(tmp_path), 1, {"w": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), {"w": jnp.zeros((3,))})
+
+
+# ------------------------------------------------------------ hlo analysis
+
+def test_hlo_analyzer_counts_loop_iterations():
+    from repro.launch.hlo_analysis import analyze_hlo_text
+
+    def f(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((5, 16, 16), jnp.float32)
+    compiled = jax.jit(f).lower(x, w).compile()
+    res = analyze_hlo_text(compiled.as_text())
+    assert res["flops"] == pytest.approx(5 * 2 * 8 * 16 * 16, rel=0.01)

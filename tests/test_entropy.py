@@ -1,0 +1,108 @@
+"""Unit + property tests for core.entropy (paper Eq. 2-4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.entropy import (
+    entropy, entropy_np, group_entropy, group_entropy_np,
+    leave_one_out_entropies, masked_soft_label_mean, soft_label,
+)
+
+
+def test_entropy_uniform_is_log_c():
+    for c in (2, 10, 100):
+        p = jnp.full((c,), 1.0 / c)
+        assert np.isclose(float(entropy(p)), np.log(c), atol=1e-6)
+
+
+def test_entropy_onehot_is_zero():
+    p = jnp.zeros((10,)).at[3].set(1.0)
+    assert float(entropy(p)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_soft_label_matches_paper_eq2(rng):
+    logits = jnp.asarray(rng.normal(size=(50, 10)), jnp.float32)
+    sl = soft_label(logits)
+    assert sl.shape == (10,)
+    assert float(jnp.sum(sl)) == pytest.approx(1.0, abs=1e-5)
+    # mean of per-sample softmaxes, not softmax of mean
+    per = jnp.mean(jnp.exp(logits - logits.max(-1, keepdims=True)) /
+                   jnp.sum(jnp.exp(logits - logits.max(-1, keepdims=True)),
+                           -1, keepdims=True), axis=0)
+    np.testing.assert_allclose(np.asarray(sl), np.asarray(per), atol=1e-5)
+
+
+def test_group_entropy_matches_numpy(rng):
+    m, c = 12, 20
+    p = rng.dirichlet(np.full(c, 0.5), size=m)
+    sizes = rng.integers(1, 100, m).astype(np.float64)
+    mask = (rng.random(m) > 0.5).astype(np.float64)
+    mask[0] = 1.0
+    ours = float(group_entropy(jnp.asarray(p, jnp.float32),
+                               jnp.asarray(sizes, jnp.float32),
+                               jnp.asarray(mask, jnp.float32)))
+    ref = group_entropy_np(p, sizes, mask)
+    assert ours == pytest.approx(ref, abs=1e-5)
+
+
+def test_leave_one_out_matches_bruteforce(rng):
+    m, c = 10, 8
+    p = rng.dirichlet(np.full(c, 0.3), size=m)
+    sizes = rng.integers(1, 100, m).astype(np.float64)
+    mask = np.ones(m)
+    loo = np.asarray(leave_one_out_entropies(
+        jnp.asarray(p, jnp.float32), jnp.asarray(sizes, jnp.float32),
+        jnp.asarray(mask, jnp.float32)))
+    for k in range(m):
+        trial = mask.copy()
+        trial[k] = 0
+        ref = group_entropy_np(p, sizes, trial)
+        assert loo[k] == pytest.approx(ref, abs=1e-4)
+
+
+def test_leave_one_out_inactive_is_noop(rng):
+    m, c = 6, 5
+    p = rng.dirichlet(np.full(c, 0.3), size=m)
+    sizes = np.ones(m)
+    mask = np.ones(m)
+    mask[2] = 0.0
+    loo = np.asarray(leave_one_out_entropies(
+        jnp.asarray(p, jnp.float32), jnp.asarray(sizes, jnp.float32),
+        jnp.asarray(mask, jnp.float32)))
+    cur = group_entropy_np(p, sizes, mask)
+    assert loo[2] == pytest.approx(cur, abs=1e-5)
+
+
+def test_leave_one_out_never_empties():
+    p = jnp.asarray([[0.5, 0.5]], jnp.float32)
+    loo = leave_one_out_entropies(p, jnp.ones((1,)), jnp.ones((1,)))
+    assert float(loo[0]) == -1.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 16), st.integers(2, 32), st.integers(0, 10_000))
+def test_property_entropy_bounds(m, c, seed):
+    """0 <= H(weighted mean) <= log C for any soft labels/sizes/mask."""
+    r = np.random.default_rng(seed)
+    p = r.dirichlet(np.full(c, 0.2), size=m)
+    sizes = r.uniform(1, 100, m)
+    mask = (r.random(m) > 0.4).astype(np.float64)
+    h = float(group_entropy(jnp.asarray(p, jnp.float32),
+                            jnp.asarray(sizes, jnp.float32),
+                            jnp.asarray(mask, jnp.float32)))
+    assert -1e-5 <= h <= np.log(c) + 1e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 16), st.integers(0, 10_000))
+def test_property_mean_is_distribution(m, c, seed):
+    r = np.random.default_rng(seed)
+    p = r.dirichlet(np.full(c, 0.2), size=m)
+    sizes = r.uniform(1, 100, m)
+    mask = np.ones(m)
+    mean = masked_soft_label_mean(
+        jnp.asarray(p, jnp.float32), jnp.asarray(sizes, jnp.float32),
+        jnp.asarray(mask, jnp.float32))
+    assert float(jnp.sum(mean)) == pytest.approx(1.0, abs=1e-4)
+    assert float(jnp.min(mean)) >= 0.0

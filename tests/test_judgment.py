@@ -1,0 +1,173 @@
+"""Algorithm 1 (maximum entropy judgment): JAX while_loop vs numpy oracle,
+plus the paper-level invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.entropy import group_entropy_np
+from repro.core.judgment import judge, judge_np
+
+
+def _case(m, c, seed, concentration=0.3):
+    r = np.random.default_rng(seed)
+    p = r.dirichlet(np.full(c, concentration), size=m)
+    sizes = r.integers(10, 500, m).astype(np.float64)
+    return p, sizes
+
+
+def test_oracle_monotone_entropy():
+    """Each greedy removal strictly increases the group entropy."""
+    p, sizes = _case(12, 10, 0)
+    A, R, ent = judge_np(p, sizes)
+    # replay removals, checking monotonicity
+    mask = np.ones(12)
+    prev = group_entropy_np(p, sizes, mask)
+    for k in R:
+        mask[k] = 0
+        cur = group_entropy_np(p, sizes, mask)
+        assert cur > prev
+        prev = cur
+    assert ent == pytest.approx(prev, abs=1e-9)
+
+
+def test_oracle_local_optimum():
+    """On termination no single removal improves entropy (Alg.1 line 13)."""
+    p, sizes = _case(12, 10, 1)
+    A, R, ent = judge_np(p, sizes)
+    mask = np.zeros(12)
+    mask[A] = 1
+    for k in A:
+        trial = mask.copy()
+        trial[k] = 0
+        if len(A) > 1:
+            assert group_entropy_np(p, sizes, trial) <= ent + 1e-6
+
+
+def test_jax_matches_oracle_many_seeds():
+    for seed in range(25):
+        m = 5 + seed % 10
+        p, sizes = _case(m, 10, seed)
+        A, R, ent = judge_np(p, sizes)
+        res = judge(jnp.asarray(p, jnp.float32),
+                    jnp.asarray(sizes, jnp.float32))
+        mask_ref = np.zeros(m)
+        mask_ref[A] = 1
+        np.testing.assert_array_equal(np.asarray(res.mask), mask_ref,
+                                      err_msg=f"seed {seed}")
+        assert float(res.entropy) == pytest.approx(ent, abs=1e-4)
+        assert int(res.num_removed) == len(R)
+
+
+def test_never_empty():
+    """Extremely biased one-hot devices: set is never emptied."""
+    m, c = 6, 6
+    p = np.eye(c)[:m] * 0.999 + 0.001 / c
+    sizes = np.ones(m)
+    res = judge(jnp.asarray(p, jnp.float32), jnp.asarray(sizes, jnp.float32))
+    assert float(jnp.sum(res.mask)) >= 1.0
+    A, R, _ = judge_np(p, sizes)
+    assert len(A) >= 1
+
+
+def test_respects_active_mask():
+    p, sizes = _case(8, 10, 3)
+    active = np.array([1, 1, 1, 1, 0, 0, 0, 0], np.float64)
+    res = judge(jnp.asarray(p, jnp.float32), jnp.asarray(sizes, jnp.float32),
+                active=jnp.asarray(active, jnp.float32))
+    # inactive devices can never be positive
+    assert np.all(np.asarray(res.mask)[4:] == 0)
+    A, R, _ = judge_np(p, sizes, active=active)
+    mask_ref = np.zeros(8)
+    mask_ref[A] = 1
+    np.testing.assert_array_equal(np.asarray(res.mask), mask_ref)
+
+
+def test_uniform_devices_all_kept():
+    """Identical (already-uniform) soft labels: nothing to remove."""
+    m, c = 8, 10
+    p = np.full((m, c), 1.0 / c)
+    res = judge(jnp.asarray(p, jnp.float32), jnp.ones((m,), jnp.float32))
+    assert float(jnp.sum(res.mask)) == m
+    assert int(res.num_removed) == 0
+
+
+def test_complementary_beats_redundant():
+    """A device complementing the label mix is kept over one amplifying
+    the majority — the paper's core selection behaviour."""
+    c = 4
+    maj = np.array([0.85, 0.05, 0.05, 0.05])
+    comp = np.array([0.02, 0.32, 0.33, 0.33])
+    p = np.stack([maj, maj, maj, comp])
+    res = judge(jnp.asarray(p, jnp.float32), jnp.ones((4,), jnp.float32))
+    mask = np.asarray(res.mask)
+    assert mask[3] == 1.0          # the complementary device survives
+    assert mask.sum() < 4          # at least one majority device is dropped
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 20), st.integers(0, 100_000))
+def test_property_jax_equals_oracle(m, c, seed):
+    p, sizes = _case(m, c, seed, concentration=0.4)
+    A, R, ent = judge_np(p, sizes)
+    res = judge(jnp.asarray(p, jnp.float32), jnp.asarray(sizes, jnp.float32))
+    mask_ref = np.zeros(m)
+    mask_ref[A] = 1
+    np.testing.assert_array_equal(np.asarray(res.mask), mask_ref)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 20), st.integers(0, 100_000))
+def test_property_final_entropy_not_below_initial(m, c, seed):
+    p, sizes = _case(m, c, seed)
+    res = judge(jnp.asarray(p, jnp.float32), jnp.asarray(sizes, jnp.float32))
+    assert float(res.entropy) >= float(res.initial_entropy) - 1e-6
+
+
+def test_pallas_backend_matches_xla():
+    """judge(backend="pallas") routes through the entropy_judge kernel and
+    must agree with the jnp sweep (and thus the numpy oracle)."""
+    for seed in range(5):
+        m = 6 + seed
+        p, sizes = _case(m, 12, seed)
+        r1 = judge(jnp.asarray(p, jnp.float32),
+                   jnp.asarray(sizes, jnp.float32))
+        r2 = judge(jnp.asarray(p, jnp.float32),
+                   jnp.asarray(sizes, jnp.float32), backend="pallas")
+        np.testing.assert_array_equal(np.asarray(r1.mask),
+                                      np.asarray(r2.mask))
+        assert float(jnp.abs(r1.entropy - r2.entropy)) < 1e-4
+
+
+def test_budgeted_judgment_respects_budget_and_near_optimal():
+    """Beyond-paper forward-greedy selection: exactly B devices; entropy
+    within tolerance of the exhaustive optimum at small M."""
+    import itertools
+    from repro.core.judgment import judge_budgeted
+    r = np.random.default_rng(0)
+    for seed in range(4):
+        m, c, b = 8, 6, 3
+        p = np.random.default_rng(seed).dirichlet(np.full(c, 0.3), size=m)
+        sizes = np.random.default_rng(seed + 1).integers(
+            10, 200, m).astype(np.float64)
+        res = judge_budgeted(jnp.asarray(p, jnp.float32),
+                             jnp.asarray(sizes, jnp.float32), b)
+        mask = np.asarray(res.mask)
+        assert mask.sum() == b
+        best = max(
+            (group_entropy_np(p, sizes,
+                              np.isin(np.arange(m), comb).astype(float))
+             for comb in itertools.combinations(range(m), b)))
+        assert float(res.entropy) >= best - 0.05
+
+
+def test_budgeted_judgment_respects_active():
+    from repro.core.judgment import judge_budgeted
+    r = np.random.default_rng(3)
+    p = r.dirichlet(np.full(5, 0.4), size=6)
+    active = np.array([1, 1, 1, 0, 0, 0], np.float64)
+    res = judge_budgeted(jnp.asarray(p, jnp.float32),
+                         jnp.ones((6,), jnp.float32), 2,
+                         active=jnp.asarray(active, jnp.float32))
+    assert np.all(np.asarray(res.mask)[3:] == 0)
+    assert np.asarray(res.mask).sum() == 2

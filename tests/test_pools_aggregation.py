@@ -1,0 +1,83 @@
+"""Device pools (Alg. 2 l.4-8/22) and weighted aggregation (l.21)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import aggregate, comm_bytes, masked_mean_tree
+from repro.core.pools import DevicePools
+
+
+def test_pools_start_all_positive():
+    p = DevicePools(20)
+    assert p.stats() == {"positive": 20, "negative": 0}
+
+
+def test_select_removes_and_update_refiles():
+    p = DevicePools(10, seed=0)
+    sel = p.select(4)
+    assert len(sel) == 4
+    assert p.stats()["positive"] == 6
+    p.update(sel[:1], sel[1:])
+    assert p.stats() == {"positive": 7, "negative": 3}
+    assert set(sel[1:]) <= p.negative
+
+
+def test_select_overflows_to_other_pool():
+    p = DevicePools(10, eps=0.0, seed=1)   # always try negative pool first
+    sel = p.select(5)                       # negative pool empty -> positive
+    assert len(sel) == 5
+
+
+def test_eps_greedy_distribution():
+    """With eps=0.8 the positive pool is preferred ~80% of the time."""
+    hits = 0
+    trials = 300
+    for seed in range(trials):
+        p = DevicePools(10, eps=0.8, seed=seed)
+        p.positive = set(range(5))
+        p.negative = set(range(5, 10))
+        sel = p.select(2)
+        if set(sel) <= set(range(5)):
+            hits += 1
+    assert 0.7 < hits / trials < 0.9
+
+
+def test_aggregate_matches_paper_formula(rng):
+    m = 5
+    stacked = {"w": jnp.asarray(rng.normal(size=(m, 3, 4)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(m, 4)), jnp.float32)}
+    sizes = jnp.asarray([10, 20, 30, 40, 50], jnp.float32)
+    mask = jnp.asarray([1, 0, 1, 0, 1], jnp.float32)
+    agg = aggregate(stacked, sizes, mask)
+    w = np.asarray(sizes) * np.asarray(mask)
+    ref = (np.asarray(stacked["w"]) * w[:, None, None]).sum(0) / w.sum()
+    np.testing.assert_allclose(np.asarray(agg["w"]), ref, rtol=1e-5)
+
+
+def test_aggregate_all_positive_is_weighted_fedavg(rng):
+    m = 4
+    stacked = {"w": jnp.asarray(rng.normal(size=(m, 8)), jnp.float32)}
+    sizes = jnp.ones((m,), jnp.float32)
+    agg = aggregate(stacked, sizes, jnp.ones((m,)))
+    np.testing.assert_allclose(np.asarray(agg["w"]),
+                               np.asarray(stacked["w"]).mean(0), rtol=1e-5)
+
+
+def test_comm_bytes_savings():
+    """Dropping negatives must save bytes; soft labels are tiny."""
+    tmpl = {"w": jnp.zeros((1000, 1000), jnp.float32)}   # 4 MB model
+    full = comm_bytes(tmpl, num_selected=10, num_positive=10,
+                      num_classes=10)
+    half = comm_bytes(tmpl, num_selected=10, num_positive=5,
+                      num_classes=10)
+    assert half["total_bytes"] < full["total_bytes"]
+    assert half["savings_fraction"] == pytest.approx(0.5, abs=0.01)
+    assert full["soft_label_bytes"] < 0.001 * full["model_bytes"]
+
+
+def test_comm_bytes_scaffold_doubles():
+    tmpl = {"w": jnp.zeros((100, 100), jnp.float32)}
+    a = comm_bytes(tmpl, 10, 10, 10, control_variate=False)
+    b = comm_bytes(tmpl, 10, 10, 10, control_variate=True)
+    assert b["model_bytes"] == 2 * a["model_bytes"]
