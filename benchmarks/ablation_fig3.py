@@ -17,9 +17,9 @@ def run(fast: bool = False):
     seeds = SEEDS[:1] if fast else SEEDS
     rounds = 15 if fast else 60
     variants = {
-        "fedentropy": dict(use_judgment=True, use_pools=True),
-        "no_pools": dict(use_judgment=True, use_pools=False),
-        "fedavg": dict(use_judgment=False, use_pools=False),
+        "fedentropy": dict(method="fedentropy"),
+        "no_pools": dict(method="fedentropy", selector="uniform"),
+        "fedavg": dict(method="fedavg"),
     }
     rows, blob = [], {}
     t0 = time.time()

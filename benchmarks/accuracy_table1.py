@@ -24,15 +24,10 @@ def run(fast: bool = False):
         accs: dict[str, list[float]] = {}
         t0 = time.time()
         for seed in seeds:
-            for meth in BASELINES:
-                r = run_method(case, seed, strategy=meth,
-                               use_judgment=False, use_pools=False,
+            for meth in BASELINES + ("fedentropy",):
+                r = run_method(case, seed, method=meth,
                                rounds=rounds, eval_every=0)
                 accs.setdefault(meth, []).append(r["final_accuracy"])
-            r = run_method(case, seed, strategy="fedavg",
-                           use_judgment=True, use_pools=True,
-                           rounds=rounds, eval_every=0)
-            accs.setdefault("fedentropy", []).append(r["final_accuracy"])
         dt = (time.time() - t0) * 1e6 / (len(seeds) * 5 * rounds)
         stats = {m: mean_std(v) for m, v in accs.items()}
         blob["cases"][case] = stats

@@ -23,9 +23,9 @@ def run(fast: bool = False):
         uplink = {"fedavg": [], "fedentropy": []}
         t0 = time.time()
         for seed in seeds:
-            a = run_method(case, seed, use_judgment=False, use_pools=False,
+            a = run_method(case, seed, method="fedavg",
                            rounds=rounds, eval_every=1)
-            b = run_method(case, seed, use_judgment=True, use_pools=True,
+            b = run_method(case, seed, method="fedentropy",
                            rounds=rounds, eval_every=1)
             r2t["fedavg"].append(rounds_to_accuracy(a["curve"], target))
             r2t["fedentropy"].append(rounds_to_accuracy(b["curve"], target))

@@ -13,9 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.simulator import (
-    FedEntropyTrainer, FLConfig, total_uplink_bytes,
-)
+import repro.fl as fl
 from repro.core.strategies import LocalSpec
 from repro.data.partition import partition, stack_clients
 from repro.data.synthetic import make_image_dataset
@@ -41,32 +39,40 @@ def make_setup(case: str, seed: int):
     return data, params, (jnp.asarray(xte), jnp.asarray(yte))
 
 
-def run_method(case: str, seed: int, *, strategy: str = "fedavg",
-               use_judgment: bool = True, use_pools: bool = True,
+def run_method(case: str, seed: int, *, method: str = "fedentropy",
+               selector: str | None = None, judge: str | None = None,
                rounds: int = ROUNDS, eval_every: int = 5):
-    """Run one (method, case, seed); returns accuracy curve + comm stats."""
+    """Run one (composition, case, seed); returns accuracy curve + comm.
+
+    ``method`` is a ``repro.fl`` composition name ("fedentropy", "fedavg",
+    "fedprox", "scaffold", "moon"); ``selector``/``judge`` override single
+    axes, e.g. ``method="scaffold", selector="pools", judge="maxent"``
+    is Table 3's SCAFFOLD+FedEntropy and ``method="fedentropy",
+    selector="uniform"`` is Fig. 3b's no-pools ablation.
+    """
     data, params, test = make_setup(case, seed)
-    tr = FedEntropyTrainer(
-        cnn.apply, params, data,
-        FLConfig(num_clients=NUM_CLIENTS, participation=PARTICIPATION,
-                 use_judgment=use_judgment, use_pools=use_pools, seed=seed),
-        LocalSpec(strategy=strategy, epochs=2, batch_size=24, lr=0.05))
+    server = fl.build(
+        method, cnn.apply, params, data,
+        fl.ServerConfig(num_clients=NUM_CLIENTS,
+                        participation=PARTICIPATION, seed=seed),
+        LocalSpec(epochs=2, batch_size=24, lr=0.05),
+        selector=selector, judge=judge)
     t0 = time.time()
-    curve = tr.run(max(rounds - 10, 0), eval_every=eval_every,
-                   eval_data=test)
+    curve = server.fit(max(rounds - 10, 0), eval_every=eval_every,
+                       eval_data=test)
     # paper Sec. 4.2: report the average accuracy over the last ten rounds
     tail = []
     for _ in range(min(10, rounds)):
-        tr.round()
-        tail.append(tr.evaluate(*test)["accuracy"])
+        server.round()
+        tail.append(server.evaluate(*test)["accuracy"])
         if eval_every:
-            curve.append({"round": tr.round_idx, "accuracy": tail[-1]})
+            curve.append({"round": server.round_idx, "accuracy": tail[-1]})
     return {
-        "case": case, "seed": seed, "strategy": strategy,
-        "judgment": use_judgment, "pools": use_pools,
+        "case": case, "seed": seed, "method": method,
+        "selector": selector, "judge": judge,
         "final_accuracy": float(np.mean(tail)),
         "curve": [(c["round"], c["accuracy"]) for c in curve],
-        "uplink_bytes": total_uplink_bytes(tr.history),
+        "uplink_bytes": fl.total_uplink_bytes(server.history),
         "rounds": rounds,
         "wall_s": time.time() - t0,
     }

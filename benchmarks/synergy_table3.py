@@ -24,13 +24,11 @@ def run(fast: bool = False):
         t0 = time.time()
         for seed in seeds:
             plain.append(run_method(
-                CASE, seed, strategy=strat, use_judgment=False,
-                use_pools=False, rounds=rounds,
+                CASE, seed, method=strat, rounds=rounds,
                 eval_every=0)["final_accuracy"])
             combo.append(run_method(
-                CASE, seed, strategy=strat, use_judgment=True,
-                use_pools=True, rounds=rounds,
-                eval_every=0)["final_accuracy"])
+                CASE, seed, method=strat, selector="pools", judge="maxent",
+                rounds=rounds, eval_every=0)["final_accuracy"])
         dt = (time.time() - t0) * 1e6 / (len(seeds) * 2 * rounds)
         p, c = mean_std(plain), mean_std(combo)
         blob[strat] = {"plain": p, "with_fedentropy": c}

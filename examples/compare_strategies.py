@@ -1,13 +1,17 @@
 """Paper Table 3 in miniature: every FL optimizer, with and without
 FedEntropy's device grouping, on the same non-IID split.
 
+With the pluggable ``repro.fl`` API the "+fedentropy" column is a
+two-keyword override of the plain composition: swap the selector to the
+epsilon-greedy pools and the judge to maximum entropy — the local update
+rule is untouched (the paper's orthogonality argument, Sec. 3.4).
+
   PYTHONPATH=src python examples/compare_strategies.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core.simulator import FedEntropyTrainer, FLConfig
-from repro.core.strategies import LocalSpec
+import repro.fl as fl
 from repro.data.partition import partition, stack_clients
 from repro.data.synthetic import make_image_dataset
 from repro.models import cnn
@@ -27,15 +31,14 @@ def main():
     print(f"{'strategy':10s} {'plain':>8s} {'+fedentropy':>12s}")
     for strat in ("fedavg", "fedprox", "scaffold", "moon"):
         accs = []
-        for judge in (False, True):
-            tr = FedEntropyTrainer(
-                cnn.apply, params, data,
-                FLConfig(num_clients=10, participation=0.4,
-                         use_judgment=judge, use_pools=judge, seed=0),
-                LocalSpec(strategy=strat, epochs=2, batch_size=20, lr=0.02))
-            for _ in range(ROUNDS):
-                tr.round()
-            accs.append(tr.evaluate(*test)["accuracy"])
+        for overrides in ({}, {"selector": "pools", "judge": "maxent"}):
+            server = fl.build(
+                strat, cnn.apply, params, data,
+                fl.ServerConfig(num_clients=10, participation=0.4, seed=0),
+                fl.LocalSpec(epochs=2, batch_size=20, lr=0.02),
+                **overrides)
+            server.fit(ROUNDS)
+            accs.append(server.evaluate(*test)["accuracy"])
         print(f"{strat:10s} {accs[0]:8.3f} {accs[1]:12.3f}")
 
 

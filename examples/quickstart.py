@@ -1,17 +1,17 @@
 """Quickstart: FedEntropy on the paper's CNN in ~60 seconds on CPU.
 
-Reproduces the paper's core loop (Alg. 2) at toy scale: 12 clients with
-single-label (case-1) non-IID data, maximum-entropy judgment picking the
-aggregation set each round, epsilon-greedy pools across rounds. Prints the
-per-round positive/negative split and the accuracy trajectory vs FedAvg.
+Reproduces the paper's core loop (Alg. 2) at toy scale through the
+pluggable ``repro.fl`` API: ``build("fedentropy", ...)`` composes
+epsilon-greedy pools + maximum-entropy judgment + weighted aggregation,
+``build("fedavg", ...)`` the uniform/admit-all baseline. Prints the
+per-round positive/negative split and the accuracy trajectory.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core.simulator import FedEntropyTrainer, FLConfig
-from repro.core.strategies import LocalSpec
+import repro.fl as fl
 from repro.data.partition import partition, stack_clients
 from repro.data.synthetic import make_image_dataset
 from repro.models import cnn
@@ -30,17 +30,16 @@ def main():
     test = (jnp.asarray(xte), jnp.asarray(yte))
 
     results = {}
-    for name, use_judgment in [("FedEntropy", True), ("FedAvg", False)]:
-        tr = FedEntropyTrainer(
-            cnn.apply, params, data,
-            FLConfig(num_clients=NUM_CLIENTS, participation=0.34,
-                     use_judgment=use_judgment, use_pools=use_judgment,
-                     seed=0),
-            LocalSpec(epochs=2, batch_size=25, lr=0.02))
+    for name, method in [("FedEntropy", "fedentropy"), ("FedAvg", "fedavg")]:
+        server = fl.build(
+            method, cnn.apply, params, data,
+            fl.ServerConfig(num_clients=NUM_CLIENTS, participation=0.34,
+                            seed=0),
+            fl.LocalSpec(epochs=2, batch_size=25, lr=0.02))
         print(f"== {name} ==")
         for r in range(ROUNDS):
-            rec = tr.round()
-            acc = tr.evaluate(*test)["accuracy"]
+            rec = server.round()
+            acc = server.evaluate(*test)["accuracy"]
             print(f"  round {r}: positives={len(rec['positive'])}/"
                   f"{len(rec['selected'])} entropy={rec['entropy']:.3f} "
                   f"acc={acc:.3f} "

@@ -1,28 +1,34 @@
-"""Faithful FedEntropy simulator (paper Algorithm 2), vmapped over clients.
+"""Legacy FedEntropy trainer — now a thin shim over :mod:`repro.fl`.
 
-The paper trains 100 PyTorch clients sequentially on one GPU; the JAX-native
-equivalent stacks the selected clients' params/data on a leading axis and
-runs ``ClientUpdate`` once under ``jax.vmap`` — identical math, one XLA
-program. Pool bookkeeping (eps-greedy, Alg. 2 lines 4-8/22) stays host-side.
+The monolithic simulator was decomposed into the pluggable
+Selector/ClientStrategy/Judge/Aggregator server API (see
+``repro.fl``'s module docstring for the migration table).
+``FedEntropyTrainer`` remains for existing callers and reproduces the
+seed trainer's round histories bit-for-bit on fixed seeds
+(tests/test_fl_api.py checks it against recorded golden histories): the
+ablation booleans map onto component choices —
 
-Supports the paper's four local strategies and the two ablations of Fig. 3b
-(``use_judgment=False`` -> plain FedAvg-style aggregation of all selected;
-``use_pools=False`` -> uniform random selection, judgment still applied).
+* ``use_judgment=False`` -> ``PassThroughJudge`` (FedAvg-of-selected),
+* ``use_pools=False``    -> ``UniformSelector`` seeded ``seed + 1``
+  (the legacy uniform RNG stream).
+
+New code should compose ``repro.fl.build(...)`` directly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Callable
+from dataclasses import dataclass
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from .aggregation import aggregate, comm_bytes, tree_bytes
-from .judgment import judge_np
+from ..fl import registry as _registry
+from ..fl.aggregators import ScaffoldAggregator, WeightedAverageAggregator
+from ..fl.judges import MaxEntropyJudge, PassThroughJudge
+from ..fl.selectors import PoolSelector, UniformSelector
+from ..fl.server import Server, ServerConfig, total_uplink_bytes
 from .pools import DevicePools
-from .strategies import ApplyFn, LocalSpec, client_update, cross_entropy
+from .strategies import ApplyFn, LocalSpec
+
+__all__ = ["FLConfig", "FedEntropyTrainer", "total_uplink_bytes"]
 
 
 @dataclass(frozen=True)
@@ -36,12 +42,8 @@ class FLConfig:
     seed: int = 0
 
 
-_VMAPPED_CACHE: dict = {}
-_EVAL_CACHE: dict = {}
-
-
 class FedEntropyTrainer:
-    """Host-side FL loop; one ``round()`` = paper Alg. 2 lines 4-22."""
+    """Back-compat facade: one ``round()`` = paper Alg. 2 lines 4-22."""
 
     def __init__(
         self,
@@ -51,136 +53,77 @@ class FedEntropyTrainer:
         fl: FLConfig,
         local: LocalSpec,
     ):
-        self.apply_fn = apply_fn
-        self.global_params = init_params
-        self.data = client_data
         self.fl = fl
         self.local = local
-        self.pools = DevicePools(fl.num_clients, fl.eps, fl.seed)
-        self._uniform_rng = np.random.default_rng(fl.seed + 1)
-        self.round_idx = 0
-        self.history: list[dict] = []
-
-        if local.strategy == "scaffold":
-            z = jax.tree.map(jnp.zeros_like, init_params)
-            self.c_global = z
-            self.c_local = jax.tree.map(
-                lambda x: jnp.zeros((fl.num_clients,) + x.shape, x.dtype),
-                init_params)
-        if local.strategy == "moon":
-            self.prev_params = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (fl.num_clients,) + x.shape),
-                init_params)
-
-        # jit cache shared across trainer instances: benchmarks build many
-        # trainers with identical (strategy, shapes) — recompiling each
-        # would dominate CPU wall time.
-        key = (local, apply_fn,
-               tuple((k, v.shape, str(v.dtype))
-                     for k, v in sorted(client_data.items())))
-        if key not in _VMAPPED_CACHE:
-            _VMAPPED_CACHE[key] = jax.jit(self._make_vmapped())
-        self._vmapped = _VMAPPED_CACHE[key]
-
-    # ------------------------------------------------------------------
-    def _make_vmapped(self):
-        spec, apply_fn = self.local, self.apply_fn
-
-        def one(global_params, data, prev_p, c_loc, c_glob):
-            return client_update(
-                apply_fn, global_params, data, spec,
-                prev_params=prev_p, c_local=c_loc, c_global=c_glob)
-
-        in_axes = (None, 0,
-                   0 if spec.strategy == "moon" else None,
-                   0 if spec.strategy == "scaffold" else None,
-                   None)
-        return jax.vmap(one, in_axes=in_axes)
-
-    # ------------------------------------------------------------------
-    def _select(self) -> list[int]:
-        k = max(1, int(round(self.fl.num_clients * self.fl.participation)))
-        if self.fl.use_pools:
-            return self.pools.select(k)
-        return [int(i) for i in self._uniform_rng.choice(
-            self.fl.num_clients, k, replace=False)]
-
-    def round(self) -> dict:
-        sel = self._select()
-        idx = np.asarray(sel)
-        data = {k: v[idx] for k, v in self.data.items()}
-
-        prev_p = (jax.tree.map(lambda x: x[idx], self.prev_params)
-                  if self.local.strategy == "moon" else None)
-        c_loc = (jax.tree.map(lambda x: x[idx], self.c_local)
-                 if self.local.strategy == "scaffold" else None)
-        c_glob = getattr(self, "c_global", None)
-
-        out = self._vmapped(self.global_params, data, prev_p, c_loc, c_glob)
-
-        soft = np.asarray(out["soft_label"], np.float64)   # (|S_t|, C)
-        sizes = np.asarray(out["size"], np.float64)
-
-        if self.fl.use_judgment:
-            a_rel, r_rel, ent = judge_np(soft, sizes)
+        cfg = ServerConfig(num_clients=fl.num_clients,
+                           participation=fl.participation,
+                           eps=fl.eps, seed=fl.seed)
+        if fl.use_pools:
+            selector = PoolSelector(fl.num_clients, fl.eps, fl.seed)
+            self.pools = selector.pools
+            self._shadow_pools = None
         else:
-            a_rel, r_rel = list(range(len(sel))), []
-            ent = float("nan")
-        mask = np.zeros(len(sel), np.float32)
-        mask[a_rel] = 1.0
+            selector = UniformSelector(fl.num_clients, fl.seed + 1)
+            # the legacy trainer kept (and verdict-updated) pools even in
+            # the uniform ablation; mirror that for observability.
+            self.pools = DevicePools(fl.num_clients, fl.eps, fl.seed)
+            self._shadow_pools = self.pools
+        strategy = _registry.get("strategy", local.strategy)(local)
+        aggregator = (ScaffoldAggregator(local.scaffold_lr_g)
+                      if local.strategy == "scaffold"
+                      else WeightedAverageAggregator())
+        judge = MaxEntropyJudge() if fl.use_judgment else PassThroughJudge()
+        self._server = Server(apply_fn, init_params, client_data, cfg,
+                              selector=selector, strategy=strategy,
+                              judge=judge, aggregator=aggregator)
 
-        # ---- aggregation (Alg. 2 line 21) -----------------------------
-        new_global = aggregate(out["params"], jnp.asarray(sizes, jnp.float32),
-                               jnp.asarray(mask))
-        if self.local.strategy == "scaffold":
-            # w_g <- w_g + eta_g * (agg - w_g); c <- c + |S_t|/N * mean dc
-            eta = self.local.scaffold_lr_g
-            new_global = jax.tree.map(
-                lambda wg, ag: wg + eta * (ag.astype(wg.dtype) - wg),
-                self.global_params, new_global)
-            frac = len(sel) / self.fl.num_clients
-            dc = jax.tree.map(lambda d: jnp.mean(d, axis=0), out["c_delta"])
-            self.c_global = jax.tree.map(
-                lambda c, d: c + frac * d, self.c_global, dc)
-            self.c_local = jax.tree.map(
-                lambda full, new: full.at[idx].set(new),
-                self.c_local, out["c_local"])
-        self.global_params = new_global
+    # ---- delegated state --------------------------------------------------
+    @property
+    def apply_fn(self) -> ApplyFn:
+        return self._server.apply_fn
 
-        if self.local.strategy == "moon":
-            self.prev_params = jax.tree.map(
-                lambda full, new: full.at[idx].set(new),
-                self.prev_params, out["params"])
+    @property
+    def data(self) -> dict:
+        return self._server.data
 
-        # ---- pools update (Alg. 2 line 22) -----------------------------
-        pos = [sel[i] for i in a_rel]
-        neg = [sel[i] for i in r_rel]
-        self.pools.update(pos, neg)
+    @property
+    def global_params(self):
+        return self._server.global_params
 
-        comm = comm_bytes(self.global_params, len(sel), len(pos),
-                          soft.shape[-1],
-                          control_variate=self.local.strategy == "scaffold")
-        rec = {"round": self.round_idx, "selected": sel, "positive": pos,
-               "negative": neg, "entropy": ent, "comm": comm}
-        self.history.append(rec)
-        self.round_idx += 1
+    @global_params.setter
+    def global_params(self, value):
+        self._server.global_params = value
+
+    @property
+    def history(self) -> list[dict]:
+        return self._server.history
+
+    @property
+    def round_idx(self) -> int:
+        return self._server.round_idx
+
+    @property
+    def c_global(self):                     # legacy scaffold attribute
+        return self._server.state["c_global"]
+
+    @property
+    def c_local(self):                      # legacy scaffold attribute
+        return self._server.state["c_local"]
+
+    @property
+    def prev_params(self):                  # legacy moon attribute
+        return self._server.state["prev_params"]
+
+    # ---- delegated behaviour ---------------------------------------------
+    def round(self) -> dict:
+        rec = self._server.round()
+        if self._shadow_pools is not None:
+            self._shadow_pools.update(rec["positive"], rec["negative"])
         return rec
 
-    # ------------------------------------------------------------------
     def evaluate(self, x: jax.Array, y: jax.Array,
                  batch: int = 512) -> dict:
-        n = x.shape[0]
-        correct, loss_sum = 0.0, 0.0
-        if self.apply_fn not in _EVAL_CACHE:
-            fn = self.apply_fn
-            _EVAL_CACHE[fn] = jax.jit(lambda p, bx: fn(p, bx)[0])
-        f = _EVAL_CACHE[self.apply_fn]
-        for i in range(0, n, batch):
-            bx, by = x[i:i + batch], y[i:i + batch]
-            logits = f(self.global_params, bx)
-            correct += float(jnp.sum(jnp.argmax(logits, -1) == by))
-            loss_sum += float(cross_entropy(logits, by)) * bx.shape[0]
-        return {"accuracy": correct / n, "loss": loss_sum / n}
+        return self._server.evaluate(x, y, batch=batch)
 
     def run(self, rounds: int, eval_every: int = 0, eval_data=None) -> list:
         evals = []
@@ -192,7 +135,3 @@ class FedEntropyTrainer:
                 m["round"] = self.round_idx
                 evals.append(m)
         return evals
-
-
-def total_uplink_bytes(history: list[dict]) -> int:
-    return int(sum(h["comm"]["total_bytes"] for h in history))

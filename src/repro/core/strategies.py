@@ -20,7 +20,6 @@ The model is abstracted as ``apply(params, x) -> (logits, features)``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable
 
 import jax

@@ -1,0 +1,72 @@
+"""``repro.fl`` — the pluggable federated-learning server API.
+
+Paper Alg. 2 decomposed into four independently swappable axes, each a
+``typing.Protocol`` (see :mod:`repro.fl.protocols`):
+
+=============  ====================================  ======================
+axis           question it answers                   built-ins
+=============  ====================================  ======================
+``Selector``   who is asked to train this round      ``pools``, ``uniform``
+``ClientStrategy``  how each client trains locally   ``fedavg``,
+                                                     ``fedprox``,
+                                                     ``scaffold``, ``moon``
+``Judge``      whose update is admitted              ``maxent``, ``none``,
+                                                     ``budget``
+``Aggregator`` how admitted updates merge            ``weighted``,
+                                                     ``scaffold``
+=============  ====================================  ======================
+
+Compositions are named in a registry so configs and benchmarks stay
+declarative::
+
+    import repro.fl as fl
+
+    server = fl.build("fedentropy", apply_fn, params, client_data,
+                      fl.ServerConfig(num_clients=32, participation=0.156))
+    server.fit(rounds=60, eval_every=5, eval_data=(xte, yte))
+
+Any axis is overridable per-build (``build("scaffold", ..., judge="maxent",
+selector="pools")`` is paper Table 3's SCAFFOLD+FedEntropy), and new
+components register under a string name::
+
+    @fl.register("judge", "accept-all")
+    class AcceptAll:
+        def __call__(self, soft_labels, sizes):
+            return list(range(len(sizes))), [], float("nan")
+
+Migration from the legacy ``core.simulator`` trainer (still available as a
+thin shim with identical fixed-seed round histories):
+
+=====================================================  ====================
+old (``FedEntropyTrainer`` + ``FLConfig``)             new (``repro.fl``)
+=====================================================  ====================
+``FLConfig(num_clients, participation, eps, seed)``    ``ServerConfig(...)``
+``use_judgment=True, use_pools=True``                  ``build("fedentropy", ...)``
+``use_judgment=False, use_pools=False``                ``build(<strategy>, ...)``
+``use_judgment=True, use_pools=False`` (Fig. 3b)       ``build("fedentropy", ..., selector="uniform")``
+``LocalSpec(strategy="scaffold", ...)``                ``build("scaffold", ..., local=LocalSpec(...))``
+``trainer.round() / trainer.run(T)``                   ``server.round() / server.fit(T)``
+``trainer.history``, ``trainer.evaluate(x, y)``        unchanged names on ``Server``
+=====================================================  ====================
+"""
+from ..core.strategies import LocalSpec
+from .aggregators import ScaffoldAggregator, WeightedAverageAggregator
+from .judges import BudgetedJudge, MaxEntropyJudge, PassThroughJudge
+from .protocols import Aggregator, ClientStrategy, Judge, Selector
+from .registry import Composition, build, get, names, register
+from .selectors import PoolSelector, UniformSelector
+from .server import (
+    BoundedJitCache, Server, ServerConfig, total_uplink_bytes,
+)
+from .strategies import (
+    FedAvgStrategy, FedProxStrategy, MoonStrategy, ScaffoldStrategy,
+)
+
+__all__ = [
+    "Aggregator", "BoundedJitCache", "BudgetedJudge", "ClientStrategy",
+    "Composition", "FedAvgStrategy", "FedProxStrategy", "Judge", "LocalSpec",
+    "MaxEntropyJudge", "MoonStrategy", "PassThroughJudge", "PoolSelector",
+    "ScaffoldAggregator", "ScaffoldStrategy", "Selector", "Server",
+    "ServerConfig", "UniformSelector", "WeightedAverageAggregator", "build",
+    "get", "names", "register", "total_uplink_bytes",
+]

@@ -1,0 +1,44 @@
+"""Aggregator implementations: merging admitted updates (Alg. 2 line 21).
+
+``WeightedAverageAggregator`` — size-weighted FedAvg over the admitted
+                                mask (``core.aggregation.aggregate``).
+``ScaffoldAggregator``        — the same average, then the SCAFFOLD damped
+                                server step w_g <- w_g + eta_g*(avg - w_g).
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core.aggregation import aggregate
+from .registry import register
+
+
+@register("aggregator", "weighted")
+class WeightedAverageAggregator:
+    """w_g = sum_{i in A} L_i W_i / sum_{i in A} L_i."""
+
+    @classmethod
+    def from_config(cls, config, local):
+        return cls()
+
+    def __call__(self, global_params, out, sizes, mask):
+        return aggregate(out["params"], sizes, mask)
+
+
+@register("aggregator", "scaffold")
+class ScaffoldAggregator:
+    """Weighted average followed by a global step of size ``lr_g``."""
+
+    def __init__(self, lr_g: float = 1.0):
+        self.lr_g = float(lr_g)
+
+    @classmethod
+    def from_config(cls, config, local):
+        return cls(local.scaffold_lr_g)
+
+    def __call__(self, global_params, out, sizes, mask):
+        avg = aggregate(out["params"], sizes, mask)
+        eta = self.lr_g
+        return jax.tree.map(
+            lambda wg, ag: wg + eta * (ag.astype(wg.dtype) - wg),
+            global_params, avg)

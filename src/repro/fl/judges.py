@@ -1,0 +1,63 @@
+"""Judge implementations: which selected devices' models aggregate.
+
+``MaxEntropyJudge``   — the paper's Algorithm 1 (greedy removal maximising
+                        size-weighted group entropy) via
+                        ``core.judgment.judge_np``, the float64 oracle the
+                        legacy trainer used.
+``PassThroughJudge``  — admits everyone (the ``use_judgment=False``
+                        ablation / plain FedAvg-of-selected).
+``BudgetedJudge``     — beyond-paper forward-greedy selection of exactly
+                        ``budget`` devices (``core.judgment.judge_budgeted``)
+                        for deployments with a hard per-round uplink cap.
+
+All return ``(accepted, rejected, entropy)`` with *relative* indices into
+the round's selection (see ``protocols.Judge``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.judgment import judge_budgeted, judge_np
+from .registry import register
+
+
+@register("judge", "maxent")
+class MaxEntropyJudge:
+    """Paper Algorithm 1: drop devices whose removal raises group entropy."""
+
+    def __call__(self, soft_labels: np.ndarray, sizes: np.ndarray
+                 ) -> tuple[list[int], list[int], float]:
+        return judge_np(soft_labels, sizes)
+
+
+@register("judge", "none")
+class PassThroughJudge:
+    """Admit every selected device; entropy is not defined (NaN)."""
+
+    def __call__(self, soft_labels: np.ndarray, sizes: np.ndarray
+                 ) -> tuple[list[int], list[int], float]:
+        return list(range(len(sizes))), [], float("nan")
+
+
+@register("judge", "budget")
+class BudgetedJudge:
+    """Keep exactly ``budget`` devices, forward-greedy on group entropy."""
+
+    def __init__(self, budget: int):
+        self.budget = int(budget)
+
+    @classmethod
+    def from_config(cls, config, local):
+        raise ValueError(
+            "BudgetedJudge needs an explicit budget — pass an instance, "
+            "e.g. build(..., judge=BudgetedJudge(budget=3))")
+
+    def __call__(self, soft_labels: np.ndarray, sizes: np.ndarray
+                 ) -> tuple[list[int], list[int], float]:
+        res = judge_budgeted(jnp.asarray(soft_labels, jnp.float32),
+                             jnp.asarray(sizes, jnp.float32), self.budget)
+        mask = np.asarray(res.mask)
+        accepted = [i for i in range(len(mask)) if mask[i] > 0]
+        rejected = [i for i in range(len(mask)) if mask[i] == 0]
+        return accepted, rejected, float(res.entropy)

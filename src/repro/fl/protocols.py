@@ -1,0 +1,99 @@
+"""Protocol classes for the four pluggable axes of an FL round (Alg. 2).
+
+FedEntropy's judgment is a *composable add-on* (paper Sec. 3.4 / Table 3):
+related methods swap exactly one axis of the round — who is asked
+(``Selector``), how each client trains (``ClientStrategy``), whose update
+is admitted (``Judge``), and how admitted updates merge (``Aggregator``).
+These are ``typing.Protocol`` classes: any object with the right methods
+plugs in, no inheritance required. Register implementations with
+:func:`repro.fl.register` to name them in configs and benchmarks.
+
+Data-plane vs control-plane split (the invariant every implementation must
+keep): ``ClientStrategy``/``Aggregator`` run traced JAX on stacked client
+axes; ``Selector``/``Judge`` run host-side numpy on per-round scalars.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, Sequence, runtime_checkable
+
+import jax
+import numpy as np
+
+Params = Any           # arbitrary pytree of arrays
+StrategyState = Any    # pytree owned by a ClientStrategy (or None)
+
+
+@runtime_checkable
+class Selector(Protocol):
+    """Chooses the round's device set S_t (Alg. 2 lines 4-8)."""
+
+    def select(self, num: int) -> list[int]:
+        """Draw ``num`` distinct device ids for this round."""
+        ...
+
+    def update(self, positives: Sequence[int],
+               negatives: Sequence[int]) -> None:
+        """Feed back the judgment verdict (Alg. 2 line 22)."""
+        ...
+
+    def stats(self) -> dict:
+        """Introspection counters (pool sizes etc.) for logging."""
+        ...
+
+
+@runtime_checkable
+class ClientStrategy(Protocol):
+    """Owns the local-update rule and ALL of its cross-round state.
+
+    State lives in an explicit pytree returned by :meth:`init_state` and
+    threaded through :meth:`update_state` — never as ad-hoc attributes on
+    the server. ``client_inputs``/``client_in_axes`` describe how the
+    state is sliced onto the vmapped per-client update.
+    """
+
+    spec: Any                      # hyperparameters (LocalSpec)
+    doubles_uplink: bool           # True if uplink carries control variates
+
+    def init_state(self, global_params: Params,
+                   num_clients: int) -> StrategyState:
+        """Build the strategy's state pytree (None if stateless)."""
+        ...
+
+    def client_inputs(self, state: StrategyState, idx: np.ndarray
+                      ) -> tuple[Params | None, Params | None, Params | None]:
+        """Slice state for the selected clients: (prev_params, c_local,
+        c_global) as consumed by ``core.strategies.client_update``."""
+        ...
+
+    def client_in_axes(self) -> tuple:
+        """vmap in_axes for (global_params, data, prev_p, c_loc, c_glob)."""
+        ...
+
+    def update_state(self, state: StrategyState, global_params: Params,
+                     out: dict, idx: np.ndarray,
+                     num_clients: int) -> StrategyState:
+        """Fold the round's client outputs back into the state pytree."""
+        ...
+
+
+@runtime_checkable
+class Judge(Protocol):
+    """Decides which selected devices' models aggregate (Alg. 1)."""
+
+    def __call__(self, soft_labels: np.ndarray, sizes: np.ndarray
+                 ) -> tuple[list[int], list[int], float]:
+        """Return (accepted, rejected, entropy) — positions are *relative*
+        indices into the round's selection, entropy is the final group
+        entropy over the accepted set (NaN if not entropy-based)."""
+        ...
+
+
+@runtime_checkable
+class Aggregator(Protocol):
+    """Merges admitted client models into the next global model."""
+
+    def __call__(self, global_params: Params, out: dict,
+                 sizes: jax.Array, mask: jax.Array) -> Params:
+        """``out`` is the stacked client-update dict (leading axis = |S_t|);
+        ``mask`` is the judge's 0/1 admission mask over that axis."""
+        ...

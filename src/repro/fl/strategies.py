@@ -1,0 +1,135 @@
+"""ClientStrategy implementations wrapping ``core.strategies.client_update``.
+
+Each class owns its cross-round state as an explicit pytree (returned by
+``init_state``, threaded through ``update_state``) instead of ad-hoc
+attributes on the trainer — the prerequisite for sharded/async execution
+where strategy state must ship between hosts like any other array.
+
+The local-update math itself stays in ``core.strategies.client_update``
+(one vmappable function, paper Alg. 2 line 11); these classes only
+describe how state is sliced onto and folded back from the stacked
+per-client axis.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.strategies import LocalSpec
+from .registry import register
+
+
+class _StatelessStrategy:
+    """Shared base for strategies with no cross-round state."""
+
+    name = "fedavg"
+    doubles_uplink = False
+
+    def __init__(self, spec: LocalSpec | None = None):
+        spec = spec or LocalSpec()
+        # the class, not LocalSpec.strategy, picks the update rule now;
+        # refuse a spec that explicitly names a *different* rule rather
+        # than silently running the wrong method
+        if spec.strategy not in (self.name, "fedavg"):
+            raise ValueError(
+                f"LocalSpec(strategy={spec.strategy!r}) conflicts with the "
+                f"{self.name!r} strategy class; build the "
+                f"{spec.strategy!r} composition instead (e.g. "
+                f"build({spec.strategy!r}, ...)) or drop the field")
+        self.spec = replace(spec, strategy=self.name)
+
+    @classmethod
+    def from_config(cls, config, local):
+        return cls(local)
+
+    def init_state(self, global_params, num_clients: int):
+        return None
+
+    def client_inputs(self, state, idx: np.ndarray):
+        return None, None, None
+
+    def client_in_axes(self) -> tuple:
+        return (None, 0, None, None, None)
+
+    def update_state(self, state, global_params, out, idx, num_clients):
+        return state
+
+
+@register("strategy", "fedavg")
+class FedAvgStrategy(_StatelessStrategy):
+    """Plain local SGD(+momentum) [McMahan et al. 2017]."""
+    name = "fedavg"
+
+
+@register("strategy", "fedprox")
+class FedProxStrategy(_StatelessStrategy):
+    """FedAvg + proximal term to the global model [Li et al. 2020]."""
+    name = "fedprox"
+
+
+@register("strategy", "moon")
+class MoonStrategy(_StatelessStrategy):
+    """Model-contrastive learning [Li et al. 2021].
+
+    State: ``prev_params`` — every client's last local model, stacked on a
+    leading (num_clients,) axis.
+    """
+    name = "moon"
+
+    def init_state(self, global_params, num_clients: int):
+        return {"prev_params": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (num_clients,) + x.shape),
+            global_params)}
+
+    def client_inputs(self, state, idx: np.ndarray):
+        prev = jax.tree.map(lambda x: x[idx], state["prev_params"])
+        return prev, None, None
+
+    def client_in_axes(self) -> tuple:
+        return (None, 0, 0, None, None)
+
+    def update_state(self, state, global_params, out, idx, num_clients):
+        return {"prev_params": jax.tree.map(
+            lambda full, new: full.at[idx].set(new),
+            state["prev_params"], out["params"])}
+
+
+@register("strategy", "scaffold")
+class ScaffoldStrategy(_StatelessStrategy):
+    """Control-variate-corrected SGD [Karimireddy et al. 2020].
+
+    State: server variate ``c_global`` plus per-client variates
+    ``c_local`` stacked on a leading (num_clients,) axis. Pair with
+    ``aggregator="scaffold"`` for the damped server step.
+    """
+    name = "scaffold"
+    doubles_uplink = True           # uplink carries model + control variate
+
+    def init_state(self, global_params, num_clients: int):
+        return {
+            "c_global": jax.tree.map(jnp.zeros_like, global_params),
+            "c_local": jax.tree.map(
+                lambda x: jnp.zeros((num_clients,) + x.shape, x.dtype),
+                global_params),
+        }
+
+    def client_inputs(self, state, idx: np.ndarray):
+        c_loc = jax.tree.map(lambda x: x[idx], state["c_local"])
+        return None, c_loc, state["c_global"]
+
+    def client_in_axes(self) -> tuple:
+        return (None, 0, None, 0, None)
+
+    def update_state(self, state, global_params, out, idx, num_clients):
+        # c <- c + |S_t|/N * mean_i dc_i ; c_i rows refreshed in place
+        frac = len(idx) / num_clients
+        dc = jax.tree.map(lambda d: jnp.mean(d, axis=0), out["c_delta"])
+        return {
+            "c_global": jax.tree.map(lambda c, d: c + frac * d,
+                                     state["c_global"], dc),
+            "c_local": jax.tree.map(lambda full, new: full.at[idx].set(new),
+                                    state["c_local"], out["c_local"]),
+        }

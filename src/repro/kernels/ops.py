@@ -9,9 +9,6 @@ launcher's --kernels flag).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 
 from . import ref
 

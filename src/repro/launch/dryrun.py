@@ -29,9 +29,8 @@ import traceback
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from ..configs import ARCHS, ASSIGNED, SHAPES
 from ..configs.base import ModelConfig, ShapeConfig
@@ -40,7 +39,7 @@ from ..core.distributed import (
     param_logical_axes,
 )
 from ..models.api import (
-    attn_cache_len, build_model, decode_window, input_specs, supported,
+    build_model, decode_window, input_specs, supported,
 )
 from ..optim import sgd
 from ..sharding.ctx import use_mesh

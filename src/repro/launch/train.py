@@ -15,7 +15,6 @@ via ``--reduced``. Example:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -23,14 +22,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCHS
-from ..core.distributed import FedSpec, make_train_step, param_logical_axes
-from ..core.pools import DevicePools
+from ..core.distributed import FedSpec, make_train_step
 from ..data.synthetic import make_token_dataset
+from ..fl.selectors import PoolSelector, UniformSelector
 from ..optim import adamw, sgd
 from ..checkpoint import save
 from ..models.api import build_model
 from ..sharding.ctx import use_mesh
-from ..sharding.specs import tree_shardings
 from .mesh import make_host_mesh
 
 
@@ -80,6 +78,9 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
     ap.add_argument("--no-fedentropy", action="store_true")
+    ap.add_argument("--selector", default="pools",
+                    choices=["pools", "uniform"],
+                    help="repro.fl Selector driving client admission")
     ap.add_argument("--eps", type=float, default=0.8)
     ap.add_argument("--mesh", default="host")
     ap.add_argument("--ckpt-dir", default="")
@@ -106,14 +107,16 @@ def main() -> None:
 
     corpus, client_idx = build_fl_corpus(
         cfg, args.logical_clients, args.case, args.seq_len, args.seed)
-    pools = DevicePools(args.logical_clients, args.eps, args.seed)
+    selector = (PoolSelector(args.logical_clients, args.eps, args.seed)
+                if args.selector == "pools"
+                else UniformSelector(args.logical_clients, args.seed + 1))
     rng = np.random.default_rng(args.seed)
 
     jitted = jax.jit(step, donate_argnums=(0, 1))
     t0 = time.time()
     with mesh, use_mesh(mesh):
         for it in range(args.steps):
-            sel = pools.select(m)                       # logical clients
+            sel = selector.select(m)                    # logical clients
             rows = []
             for c in sel:
                 take = rng.choice(client_idx[c], args.per_client_batch)
@@ -131,17 +134,17 @@ def main() -> None:
             mask = np.asarray(metrics["mask"])
             pos = [sel[i] for i in range(m) if mask[i] > 0]
             neg = [sel[i] for i in range(m) if mask[i] == 0]
-            pools.update(pos, neg)
+            selector.update(pos, neg)
             print(f"step {it:4d} loss={float(metrics['loss']):.4f} "
                   f"pos={int(metrics['num_positive'])}/{m} "
                   f"ent={float(metrics['entropy']):.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f}", flush=True)
     dt = time.time() - t0
     print(f"done: {args.steps} rounds in {dt:.1f}s "
-          f"({dt / args.steps:.2f}s/round); pools={pools.stats()}")
+          f"({dt / args.steps:.2f}s/round); selector={selector.stats()}")
     if args.ckpt_dir:
         path = save(args.ckpt_dir, args.steps, params,
-                    meta={"arch": cfg.name, "pools": pools.stats()})
+                    meta={"arch": cfg.name, "selector": selector.stats()})
         print("checkpoint:", path)
 
 

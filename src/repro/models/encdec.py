@@ -11,8 +11,6 @@ MLP. Encoder: bidirectional self-attn blocks over the frames.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -14,14 +14,12 @@ the CPU host). ``cfg.remat`` wraps the block body in ``jax.checkpoint``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..sharding.ctx import shard_act
 from . import attention as attn
 from . import moe as moe_mod
 from . import ssm as ssm_mod

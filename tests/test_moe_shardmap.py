@@ -11,7 +11,6 @@ import pytest
 
 from repro.configs import ARCHS
 from repro.models import moe as moe_mod
-from repro.models.api import build_model
 from repro.sharding.ctx import use_mesh
 
 

@@ -1,0 +1,22 @@
+"""Property-based optimizer tests.
+
+Requires the ``hypothesis`` dev extra (``pip install -e .[dev]``); the
+module skips cleanly when it is absent."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.optim import sgd
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1e-4, 0.5), st.floats(0.0, 0.95))
+def test_property_sgd_step_size_scales(lr, momentum):
+    opt = sgd(lr=lr, momentum=momentum)
+    p = {"w": jnp.ones((3,))}
+    g = {"w": jnp.ones((3,))}
+    p1, _ = opt.update(g, opt.init(p), p)
+    np.testing.assert_allclose(np.asarray(p1["w"]), 1.0 - lr, rtol=1e-5)

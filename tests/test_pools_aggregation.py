@@ -1,10 +1,9 @@
 """Device pools (Alg. 2 l.4-8/22) and weighted aggregation (l.21)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.aggregation import aggregate, comm_bytes, masked_mean_tree
+from repro.core.aggregation import aggregate, comm_bytes
 from repro.core.pools import DevicePools
 
 
