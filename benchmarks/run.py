@@ -15,8 +15,8 @@ import json
 import os
 import sys
 
-from . import ablation_fig3, accuracy_table1, comm_table2, microbench, \
-    roofline, synergy_table3
+from . import ablation_fig3, accuracy_table1, comm_table2, \
+    engine_throughput, microbench, roofline, synergy_table3
 
 TABLES = {
     "table1": accuracy_table1.run,
@@ -25,6 +25,7 @@ TABLES = {
     "fig3": ablation_fig3.run,
     "micro": microbench.run,
     "roofline": roofline.run,
+    "engine": engine_throughput.run,
 }
 
 

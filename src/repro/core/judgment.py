@@ -38,6 +38,9 @@ class JudgmentResult(NamedTuple):
     entropy: jax.Array       # () final group entropy over positives
     initial_entropy: jax.Array  # () entropy before any removal
     num_removed: jax.Array   # () int32 — |R|
+    # (M,) int32 device indices in greedy-removal order, -1 padded; None for
+    # implementations that do not track order (judge_budgeted).
+    removal_order: jax.Array | None = None
 
 
 def judge(
@@ -70,7 +73,7 @@ def judge(
     init_ent = group_entropy(soft_labels, sizes, active)
 
     def cond(state):
-        mask, ent, removed, improved = state
+        mask, ent, removed, improved, order = state
         return jnp.logical_and(improved, removed < cap)
 
     def _loo(mask):
@@ -82,7 +85,7 @@ def judge(
         return leave_one_out_entropies(soft_labels, sizes, mask)
 
     def body(state):
-        mask, ent, removed, _ = state
+        mask, ent, removed, _, order = state
         loo = _loo(mask)                                         # (M,)
         # only currently-active devices are candidates
         cand = jnp.where(mask > 0, loo, -jnp.inf)
@@ -93,16 +96,20 @@ def judge(
             improves, mask.at[best].set(0.0), mask
         )
         new_ent = jnp.where(improves, best_ent, ent)
+        new_order = jnp.where(
+            improves, order.at[removed].set(best.astype(jnp.int32)), order)
         return (new_mask, new_ent,
                 removed + jnp.where(improves, 1, 0).astype(jnp.int32),
-                improves)
+                improves, new_order)
 
-    mask, ent, removed, _ = jax.lax.while_loop(
+    mask, ent, removed, _, order = jax.lax.while_loop(
         cond, body,
-        (active, init_ent, jnp.zeros((), jnp.int32), jnp.array(True)),
+        (active, init_ent, jnp.zeros((), jnp.int32), jnp.array(True),
+         jnp.full((m,), -1, jnp.int32)),
     )
     return JudgmentResult(mask=mask, entropy=ent,
-                          initial_entropy=init_ent, num_removed=removed)
+                          initial_entropy=init_ent, num_removed=removed,
+                          removal_order=order)
 
 
 def judge_budgeted(

@@ -16,6 +16,12 @@ axis           question it answers                   built-ins
                                                      ``scaffold``
 =============  ====================================  ======================
 
+A fifth registry kind, ``engine``, picks the round *driver* for a
+composition: ``"sequential"`` (the default ``Server``) or ``"pipelined"``
+(:mod:`repro.fl.runtime` — mesh-sharded client fan-out + judgment
+speculation), selected per-build via ``build(..., engine=..., runtime=
+RuntimeConfig(...))``.
+
 Compositions are named in a registry so configs and benchmarks stay
 declarative::
 
@@ -61,12 +67,15 @@ from .server import (
 from .strategies import (
     FedAvgStrategy, FedProxStrategy, MoonStrategy, ScaffoldStrategy,
 )
+from . import runtime  # noqa: E402 — registers engines; after .server
+from .runtime import PipelinedServer, RuntimeConfig
 
 __all__ = [
     "Aggregator", "BoundedJitCache", "BudgetedJudge", "ClientStrategy",
     "Composition", "FedAvgStrategy", "FedProxStrategy", "Judge", "LocalSpec",
-    "MaxEntropyJudge", "MoonStrategy", "PassThroughJudge", "PoolSelector",
-    "ScaffoldAggregator", "ScaffoldStrategy", "Selector", "Server",
-    "ServerConfig", "UniformSelector", "WeightedAverageAggregator", "build",
-    "get", "names", "register", "total_uplink_bytes",
+    "MaxEntropyJudge", "MoonStrategy", "PassThroughJudge", "PipelinedServer",
+    "PoolSelector", "RuntimeConfig", "ScaffoldAggregator", "ScaffoldStrategy",
+    "Selector", "Server", "ServerConfig", "UniformSelector",
+    "WeightedAverageAggregator", "build", "get", "names", "register",
+    "runtime", "total_uplink_bytes",
 ]

@@ -1,9 +1,13 @@
 """Judge implementations: which selected devices' models aggregate.
 
 ``MaxEntropyJudge``   — the paper's Algorithm 1 (greedy removal maximising
-                        size-weighted group entropy) via
-                        ``core.judgment.judge_np``, the float64 oracle the
-                        legacy trainer used.
+                        size-weighted group entropy). ``backend=`` picks the
+                        implementation: ``"numpy"`` (default) is the float64
+                        oracle the legacy trainer used; ``"xla"`` and
+                        ``"pallas"`` route through the traced
+                        ``core.judgment.judge`` — the latter tiles the class
+                        axis through the Pallas ``entropy_judge_sweep``
+                        kernel for huge C.
 ``PassThroughJudge``  — admits everyone (the ``use_judgment=False``
                         ablation / plain FedAvg-of-selected).
 ``BudgetedJudge``     — beyond-paper forward-greedy selection of exactly
@@ -11,24 +15,65 @@
                         for deployments with a hard per-round uplink cap.
 
 All return ``(accepted, rejected, entropy)`` with *relative* indices into
-the round's selection (see ``protocols.Judge``).
+the round's selection (see ``protocols.Judge``); rejected indices are in
+greedy-removal order for every backend. Judges additionally expose
+``traced()`` — a jit-compatible callable returning a
+``core.judgment.JudgmentResult`` — which is how the mesh train step
+(``repro.launch.train``) and the pipelined engine's speculation
+(``repro.fl.runtime``) run the same judge axis on device.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.judgment import judge_budgeted, judge_np
+from ..core.judgment import (
+    JudgmentResult, judge, judge_budgeted, judge_np,
+)
 from .registry import register
+
+
+def _result_to_lists(res: JudgmentResult
+                     ) -> tuple[list[int], list[int], float]:
+    mask = np.asarray(res.mask)
+    accepted = [i for i in range(len(mask)) if mask[i] > 0]
+    if res.removal_order is not None:
+        rejected = [int(k) for k in np.asarray(res.removal_order) if k >= 0]
+    else:
+        rejected = [i for i in range(len(mask)) if mask[i] == 0]
+    return accepted, rejected, float(res.entropy)
 
 
 @register("judge", "maxent")
 class MaxEntropyJudge:
-    """Paper Algorithm 1: drop devices whose removal raises group entropy."""
+    """Paper Algorithm 1: drop devices whose removal raises group entropy.
+
+    backend: "numpy" (float64 host oracle), "xla" (traced float32
+    leave-one-out sweep) or "pallas" (class-axis-tiled kernel).
+    """
+
+    def __init__(self, backend: str = "numpy"):
+        if backend not in ("numpy", "xla", "pallas"):
+            raise ValueError(f"unknown judge backend {backend!r}")
+        self.backend = backend
+        self._jitted = None      # compiled host-call path, built lazily
 
     def __call__(self, soft_labels: np.ndarray, sizes: np.ndarray
                  ) -> tuple[list[int], list[int], float]:
-        return judge_np(soft_labels, sizes)
+        if self.backend == "numpy":
+            return judge_np(soft_labels, sizes)
+        if self._jitted is None:  # don't re-trace the while_loop per round
+            self._jitted = jax.jit(self.traced())
+        res = self._jitted(jnp.asarray(soft_labels, jnp.float32),
+                           jnp.asarray(sizes, jnp.float32))
+        return _result_to_lists(res)
+
+    def traced(self):
+        """Jit-compatible (soft_labels, sizes) -> JudgmentResult; numpy
+        backend falls back to the xla sweep (same greedy, float32)."""
+        backend = "xla" if self.backend == "numpy" else self.backend
+        return lambda soft, sizes: judge(soft, sizes, backend=backend)
 
 
 @register("judge", "none")
@@ -38,6 +83,17 @@ class PassThroughJudge:
     def __call__(self, soft_labels: np.ndarray, sizes: np.ndarray
                  ) -> tuple[list[int], list[int], float]:
         return list(range(len(sizes))), [], float("nan")
+
+    def traced(self):
+        def all_in(soft, sizes):
+            m = soft.shape[0]
+            ones = jnp.ones((m,), jnp.float32)
+            nan = jnp.full((), jnp.nan, jnp.float32)
+            return JudgmentResult(
+                mask=ones, entropy=nan, initial_entropy=nan,
+                num_removed=jnp.zeros((), jnp.int32),
+                removal_order=jnp.full((m,), -1, jnp.int32))
+        return all_in
 
 
 @register("judge", "budget")
@@ -57,7 +113,8 @@ class BudgetedJudge:
                  ) -> tuple[list[int], list[int], float]:
         res = judge_budgeted(jnp.asarray(soft_labels, jnp.float32),
                              jnp.asarray(sizes, jnp.float32), self.budget)
-        mask = np.asarray(res.mask)
-        accepted = [i for i in range(len(mask)) if mask[i] > 0]
-        rejected = [i for i in range(len(mask)) if mask[i] == 0]
-        return accepted, rejected, float(res.entropy)
+        return _result_to_lists(res)
+
+    def traced(self):
+        budget = self.budget
+        return lambda soft, sizes: judge_budgeted(soft, sizes, budget)

@@ -25,7 +25,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any
 
-KINDS = ("selector", "strategy", "judge", "aggregator", "composition")
+KINDS = ("selector", "strategy", "judge", "aggregator", "composition",
+         "engine")
 
 _REGISTRY: dict[str, dict[str, Any]] = {k: {} for k in KINDS}
 
@@ -76,8 +77,8 @@ def _instantiate(kind: str, spec: Any, config, local):
 
 def build(name: str, apply_fn, init_params, client_data, config,
           local=None, *, selector=None, strategy=None, judge=None,
-          aggregator=None):
-    """Construct a :class:`repro.fl.Server` from a composition name.
+          aggregator=None, engine=None, runtime=None):
+    """Construct a server (an *engine*) from a composition name.
 
     ``selector``/``strategy``/``judge``/``aggregator`` override individual
     axes of the named recipe — each accepts a registered name or a
@@ -85,14 +86,37 @@ def build(name: str, apply_fn, init_params, client_data, config,
 
         build("fedentropy", ..., selector="uniform")   # Fig. 3b no-pools
         build("scaffold", ..., judge="maxent", selector="pools")  # Table 3
+
+    ``engine`` picks the round driver (default the sequential
+    :class:`repro.fl.Server`; ``"pipelined"`` is the mesh-sharded,
+    speculation-capable :class:`repro.fl.runtime.PipelinedServer`) and
+    ``runtime`` passes a :class:`repro.fl.runtime.RuntimeConfig` to it
+    (a ``runtime`` without an ``engine`` implies ``"pipelined"`` — the
+    engine that config belongs to)::
+
+        build("fedentropy", ..., engine="pipelined",
+              runtime=RuntimeConfig(speculate=True, spec_backend="pallas"))
     """
     from ..core.strategies import LocalSpec
+    from . import runtime as _runtime  # noqa: F401 — registers engines
     from .server import Server
 
     comp = get("composition", name)
     local = local if local is not None else LocalSpec()
     strat = _instantiate("strategy", strategy or comp.strategy, config, local)
-    return Server(
+    if engine is None:
+        # a RuntimeConfig is the pipelined engine's config: supplying one
+        # without naming an engine must not silently ignore its knobs
+        engine_cls = Server if runtime is None else get("engine",
+                                                        "pipelined")
+    elif isinstance(engine, str):
+        engine_cls = get("engine", engine)
+    else:
+        engine_cls = engine
+    kwargs = {}
+    if runtime is not None:
+        kwargs["runtime"] = runtime
+    return engine_cls(
         apply_fn, init_params, client_data, config,
         selector=_instantiate("selector", selector or comp.selector,
                               config, local),
@@ -100,6 +124,7 @@ def build(name: str, apply_fn, init_params, client_data, config,
         judge=_instantiate("judge", judge or comp.judge, config, local),
         aggregator=_instantiate("aggregator", aggregator or comp.aggregator,
                                 config, strat.spec),
+        **kwargs,
     )
 
 

@@ -1,0 +1,40 @@
+"""``repro.fl.runtime`` — pipelined, mesh-sharded execution engines.
+
+The same four composition axes as :class:`repro.fl.Server`, driven by an
+engine that (a) shards the stacked client axis over a ``("clients",)``
+device mesh via ``shard_map``, (b) overlaps the host-side float64
+judgment oracle with the next round's client compute by speculating the
+verdict on device (XLA or Pallas ``entropy_judge_sweep`` backends), and
+(c) optionally shares compiled programs across servers through a bounded
+process-level cache.
+
+Build through the registry::
+
+    import repro.fl as fl
+    from repro.fl.runtime import RuntimeConfig
+
+    server = fl.build("fedentropy", apply_fn, params, data, config,
+                      engine="pipelined",
+                      runtime=RuntimeConfig(speculate=True,
+                                            spec_backend="pallas"))
+
+With ``RuntimeConfig()`` defaults (no speculation, shard="auto") the
+engine reproduces sequential ``Server`` round histories bit-for-bit on
+fixed seeds; see tests/test_runtime_engine.py.
+"""
+from .compile_cache import (
+    ProcessCompileCache, disable_process_cache, enable_process_cache,
+    process_cache,
+)
+from .engine import PipelinedServer, RuntimeConfig, SequentialEngine
+from .sharding import (
+    CLIENT_AXIS, client_mesh_from, make_client_mesh, make_sharded_client_fn,
+    pad_to_multiple,
+)
+
+__all__ = [
+    "CLIENT_AXIS", "PipelinedServer", "ProcessCompileCache", "RuntimeConfig",
+    "SequentialEngine", "client_mesh_from", "disable_process_cache",
+    "enable_process_cache", "make_client_mesh", "make_sharded_client_fn",
+    "pad_to_multiple", "process_cache",
+]

@@ -1,0 +1,83 @@
+"""Opt-in process-level bounded compile cache (ROADMAP item).
+
+Benchmark sweeps build hundreds of ``Server``s over the same
+(apply_fn, LocalSpec, client-data shapes) and — with the per-server
+``BoundedJitCache`` default — recompile the vmapped ClientUpdate for every
+one of them. Enabling this cache restores cross-server sharing without
+unbounded growth: one process-global LRU keyed on
+``(tag, apply_fn, spec, in_axes, shapes)`` (the keys
+``Server._client_key`` builds — the apply_fn participates by identity
+and is pinned by the entry, so object-address reuse can never alias a
+stale program), bounded at ``maxsize`` entries.
+
+Usage::
+
+    from repro.fl.runtime import enable_process_cache
+    cache = enable_process_cache(maxsize=32)
+    ... build/run many servers ...
+    print(cache.stats())            # {"hits": ..., "misses": ..., ...}
+    disable_process_cache()
+
+The per-server cache stays the default because process-level sharing keys
+on apply_fn identity: callers that rebuild closures per server get no
+sharing (each closure is its own key); callers that hold one apply_fn get
+full sharing. Nothing here is thread-safe — FL round loops are host-serial
+by design.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+from ..server import BoundedJitCache
+
+
+class ProcessCompileCache(BoundedJitCache):
+    """Bounded LRU shared by every Server in the process, with hit stats."""
+
+    def __init__(self, maxsize: int = 32):
+        super().__init__(maxsize)
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Any, make: Callable[[], Any]):
+        hit = key in self._entries
+        fn = super().get(key, make)
+        if hit:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return fn
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self), "maxsize": self.maxsize}
+
+
+_PROCESS_CACHE: Optional[ProcessCompileCache] = None
+
+
+def enable_process_cache(maxsize: int = 32) -> ProcessCompileCache:
+    """Turn on process-level compiled-program sharing; returns the cache.
+
+    Re-enabling with a different ``maxsize`` rebounds (and trims) the
+    existing cache rather than dropping compiled programs.
+    """
+    global _PROCESS_CACHE
+    if _PROCESS_CACHE is None:
+        _PROCESS_CACHE = ProcessCompileCache(maxsize)
+    else:
+        _PROCESS_CACHE.maxsize = max(1, int(maxsize))
+        while len(_PROCESS_CACHE._entries) > _PROCESS_CACHE.maxsize:
+            _PROCESS_CACHE._entries.popitem(last=False)
+    return _PROCESS_CACHE
+
+
+def disable_process_cache() -> None:
+    """Drop the process cache; servers fall back to their per-server LRUs."""
+    global _PROCESS_CACHE
+    _PROCESS_CACHE = None
+
+
+def process_cache() -> Optional[ProcessCompileCache]:
+    """The active process-level cache, or None when disabled (default)."""
+    return _PROCESS_CACHE

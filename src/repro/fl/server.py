@@ -105,18 +105,34 @@ class Server:
         self._jit_cache = BoundedJitCache(config.jit_cache_size)
 
     # ------------------------------------------------------------------
+    def _compile_cache(self):
+        """Per-server LRU by default; the process-level cache when the
+        runtime subsystem's opt-in is enabled (keys below carry the
+        apply_fn identity so sharing across servers is sound)."""
+        from .runtime.compile_cache import process_cache
+        cache = process_cache()
+        # explicit None check: an empty cache is len()==0, hence falsy
+        return self._jit_cache if cache is None else cache
+
+    def _client_key(self) -> tuple:
+        # the apply_fn itself (identity hash) keys the entry — embedding
+        # the object rather than id() pins it for the cache's lifetime,
+        # so a GC'd callable can never alias a reused address
+        return ("client", self.apply_fn, self.strategy.spec,
+                self.strategy.client_in_axes(),
+                tuple((k, v.shape, str(v.dtype))
+                      for k, v in sorted(self.data.items())))
+
     def _client_fn(self):
-        key = ("client", self.strategy.spec,
-               tuple((k, v.shape, str(v.dtype))
-                     for k, v in sorted(self.data.items())))
-        return self._jit_cache.get(key, lambda: jax.jit(_make_client_fn(
-            self.apply_fn, self.strategy.spec,
-            self.strategy.client_in_axes())))
+        return self._compile_cache().get(
+            self._client_key(), lambda: jax.jit(_make_client_fn(
+                self.apply_fn, self.strategy.spec,
+                self.strategy.client_in_axes())))
 
     def _eval_fn(self):
         fn = self.apply_fn
-        return self._jit_cache.get(
-            "eval", lambda: jax.jit(lambda p, bx: fn(p, bx)[0]))
+        return self._compile_cache().get(
+            ("eval", fn), lambda: jax.jit(lambda p, bx: fn(p, bx)[0]))
 
     # ------------------------------------------------------------------
     def round(self) -> dict:

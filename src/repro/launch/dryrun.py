@@ -44,7 +44,7 @@ from ..models.api import (
 from ..optim import sgd
 from ..sharding.ctx import use_mesh
 from ..sharding.specs import logical_to_pspec, tree_shardings
-from .hlo_analysis import analyze_hlo_text
+from .hlo_analysis import analyze_hlo_text, cost_analysis_dict
 from .mesh import fl_clients_for, make_production_mesh
 
 # TPU v5e hardware constants (per chip)
@@ -198,7 +198,7 @@ def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled.cost_analysis())
     hlo_text = compiled.as_text()
     if save_hlo:
         with open(save_hlo, "w") as f:

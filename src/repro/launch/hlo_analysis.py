@@ -292,6 +292,20 @@ def analyze_hlo_text(text: str) -> dict:
     return aggregate(comps)
 
 
+def cost_analysis_dict(ca) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jaxlibs return one properties dict; jax 0.4.3x returns a
+    per-device LIST of such dicts (and None when analysis is unavailable).
+    Returns a single flat dict — for the list shape, the first device's
+    properties (all devices run the same SPMD program)."""
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
+
+
 def _add_fusion_site_bytes(text: str, comps: dict) -> None:
     """Second pass: for every fusion call site, add result bytes + operand
     access bytes (sliced-only params count their slice sizes)."""

@@ -1,16 +1,32 @@
-"""FL training driver: FedEntropy over the mesh (or host devices).
+"""FL training driver, composed end-to-end from the ``repro.fl`` registry.
 
-Runs the gradient-level FedEntropy round (core/distributed.py) on real
-data: the synthetic non-IID corpus is partitioned into logical clients
-(case1/case2/dirichlet), the epsilon-greedy pools pick which clients feed
-each mesh client-slot per round, and the judgment mask inside the step
-decides whose gradients aggregate.
+Two execution paths, one composition API:
+
+* ``--engine mesh`` (default) — the gradient-level FedEntropy round
+  (core/distributed.py): one jitted train step over the device mesh, the
+  judge axis traced *inside* the step (``Judge.traced()``, optionally the
+  Pallas sweep via ``--judge-backend pallas``), the selector feeding mesh
+  client slots per round.
+* ``--engine sequential | pipelined`` — the weights-level ``repro.fl``
+  server (paper Alg. 2 with E local epochs) over the same token corpus,
+  built with ``fl.build(..., engine=...)``; ``pipelined`` adds the runtime
+  subsystem's mesh-sharded client fan-out and (``--speculate``) verdict
+  speculation.
+
+Every axis — selector, judge, engine — resolves through ``repro.fl``
+registries, so both paths run the identical composition code the
+benchmarks and tests use. (At the gradient level, masked size-weighted
+gradient averaging IS the weighted aggregator at E=1 — see
+core/distributed.py's module docstring — which is why the mesh path has
+no separate aggregator knob.)
 
 CPU-friendly: ``--mesh host`` uses whatever devices exist; reduced configs
 via ``--reduced``. Example:
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
       --steps 20 --clients 8 --case case1 --mesh host
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+      --engine pipelined --speculate --steps 10
 """
 from __future__ import annotations
 
@@ -21,10 +37,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.fl as fl
 from ..configs import ARCHS
 from ..core.distributed import FedSpec, make_train_step
 from ..data.synthetic import make_token_dataset
-from ..fl.selectors import PoolSelector, UniformSelector
 from ..optim import adamw, sgd
 from ..checkpoint import save
 from ..models.api import build_model
@@ -62,54 +78,119 @@ def build_fl_corpus(cfg, num_clients: int, case: str, seq_len: int,
     return x, clients
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--clients", type=int, default=8,
-                    help="mesh client slots per round (M)")
-    ap.add_argument("--logical-clients", type=int, default=32,
-                    help="logical FL population feeding the slots")
-    ap.add_argument("--case", default="case1",
-                    choices=["case1", "case2", "case3"])
-    ap.add_argument("--per-client-batch", type=int, default=2)
-    ap.add_argument("--seq-len", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=0.01)
-    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
-    ap.add_argument("--no-fedentropy", action="store_true")
-    ap.add_argument("--selector", default="pools",
-                    choices=["pools", "uniform"],
-                    help="repro.fl Selector driving client admission")
-    ap.add_argument("--eps", type=float, default=0.8)
-    ap.add_argument("--mesh", default="host")
-    ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def _components(args, *, host_oracle: bool):
+    """Resolve the selector and judge axes from the ``repro.fl`` registry.
 
-    cfg = ARCHS[args.arch]
-    if args.reduced:
-        cfg = cfg.reduced()
-    cfg = cfg.replace(remat="none", param_dtype="float32", dtype="float32")
-    model = build_model(cfg)
+    ``host_oracle=True`` (server engines) keeps the host-side judge on the
+    float64 numpy oracle — the verdict of record, and the check that
+    catches float32 tie-margin misspeculation; ``--judge-backend`` only
+    picks the *traced* implementation (mesh step / pipelined speculation).
+    """
+    sel_cls = fl.get("selector", args.selector)
+    config = fl.ServerConfig(num_clients=args.logical_clients,
+                             participation=args.clients /
+                             max(args.logical_clients, 1),
+                             eps=args.eps, seed=args.seed)
+    selector = sel_cls.from_config(config=config, local=None)
+    if args.judge == "maxent":
+        judge = fl.MaxEntropyJudge(
+            backend="numpy" if host_oracle else args.judge_backend)
+    else:
+        judge = fl.get("judge", args.judge)()
+    return config, selector, judge
+
+
+def lm_client_apply(model, cfg):
+    """Adapter: (params, x:(B, L) tokens) -> (next-token logits, feats) so
+    the weights-level ``Server``/``client_update`` machinery drives an LM.
+    Each sample is an (L,) window; the classification target is its final
+    token, the soft label (paper Eq. 2) the mean next-token distribution —
+    the LM analog of the per-device label signature."""
+    def apply_fn(params, x):
+        batch = {"tokens": x[:, :-1]}
+        b = x.shape[0]
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (b, cfg.num_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        logits, _ = model.forward(params, batch)
+        last = logits[:, -1, :].astype(jnp.float32)
+        return last, last
+    return apply_fn
+
+
+def stack_lm_clients(corpus, client_idx, samples: int, seq_len: int,
+                     seed: int):
+    """(N, S, L+1) token windows + final-token labels for the fl server."""
+    rng = np.random.default_rng(seed)
+    xs, ys = [], []
+    for rows in client_idx:
+        take = rng.choice(rows, samples)
+        win = corpus[take, : seq_len + 1]
+        xs.append(win)
+        ys.append(win[:, -1])
+    return {
+        "x": jnp.asarray(np.stack(xs), jnp.int32),
+        "y": jnp.asarray(np.stack(ys), jnp.int32),
+        "w": jnp.ones((len(client_idx), samples), jnp.float32),
+    }
+
+
+def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
+    """Weights-level rounds through ``fl.build`` (sequential or pipelined)."""
+    config, selector, judge = _components(args, host_oracle=True)
+    data = stack_lm_clients(corpus, client_idx, args.samples_per_client,
+                            args.seq_len, args.seed)
+    runtime = fl.RuntimeConfig(speculate=args.speculate,
+                               spec_backend=args.judge_backend)
+    composition = "fedavg" if args.no_fedentropy else "fedentropy"
+    server = fl.build(
+        composition, lm_client_apply(model, cfg), model.init(
+            jax.random.PRNGKey(args.seed)), data, config,
+        fl.LocalSpec(epochs=args.local_epochs, lr=args.lr,
+                     batch_size=args.per_client_batch),
+        selector=selector,
+        judge=judge if not args.no_fedentropy else None,
+        engine=args.engine, runtime=runtime)
+    t0 = time.time()
+    for it in range(args.steps):
+        rec = server.round()
+        extra = ""
+        if "spec_hit" in rec:
+            extra = (f" spec={'hit' if rec['spec_hit'] else 'miss'}"
+                     f"{' redispatched' if rec['redispatched'] else ''}")
+        print(f"round {it:4d} pos={len(rec['positive'])}/"
+              f"{len(rec['selected'])} ent={rec['entropy']:.4f}"
+              f" comm={rec['comm']['total_bytes']}B{extra}", flush=True)
+    dt = time.time() - t0
+    # read stats off the SERVER's selector: a speculative hit adopts a
+    # deepcopy, orphaning the local reference built above
+    stats = server.selector.stats()
+    print(f"done: {args.steps} rounds in {dt:.1f}s "
+          f"({dt / args.steps:.2f}s/round); selector={stats}")
+    if args.ckpt_dir:
+        path = save(args.ckpt_dir, args.steps, server.global_params,
+                    meta={"arch": cfg.name, "engine": args.engine,
+                          "selector": stats})
+        print("checkpoint:", path)
+
+
+def run_mesh_engine(args, cfg, model, corpus, client_idx) -> None:
+    """Gradient-level rounds: one jitted mesh step, judge traced inside."""
+    _, selector, judge = _components(args, host_oracle=False)
     mesh = make_host_mesh()
-
     m = args.clients
     bsz = m * args.per_client_batch
     fed = FedSpec(num_clients=m, enabled=not args.no_fedentropy)
     opt = (sgd(lr=args.lr, momentum=0.5) if args.optimizer == "sgd"
            else adamw(lr=args.lr))
-    step = make_train_step(model, opt, fed)
+    step = make_train_step(model, opt, fed, judge_fn=judge.traced())
 
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
     opt_state = opt.init(params)
-
-    corpus, client_idx = build_fl_corpus(
-        cfg, args.logical_clients, args.case, args.seq_len, args.seed)
-    selector = (PoolSelector(args.logical_clients, args.eps, args.seed)
-                if args.selector == "pools"
-                else UniformSelector(args.logical_clients, args.seed + 1))
     rng = np.random.default_rng(args.seed)
 
     jitted = jax.jit(step, donate_argnums=(0, 1))
@@ -146,6 +227,62 @@ def main() -> None:
         path = save(args.ckpt_dir, args.steps, params,
                     meta={"arch": cfg.name, "selector": selector.stats()})
         print("checkpoint:", path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=8,
+                    help="client slots per round (M = |S_t|)")
+    ap.add_argument("--logical-clients", type=int, default=32,
+                    help="logical FL population feeding the slots")
+    ap.add_argument("--case", default="case1",
+                    choices=["case1", "case2", "case3"])
+    ap.add_argument("--per-client-batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
+    ap.add_argument("--no-fedentropy", action="store_true")
+    ap.add_argument("--engine", default="mesh",
+                    choices=["mesh", "sequential", "pipelined"],
+                    help="mesh = gradient-level jitted step; sequential/"
+                         "pipelined = weights-level repro.fl engines")
+    ap.add_argument("--selector", default="pools",
+                    choices=["pools", "uniform"],
+                    help="repro.fl Selector driving client admission")
+    ap.add_argument("--judge", default="maxent", choices=["maxent", "none"],
+                    help="repro.fl Judge axis (both engines)")
+    ap.add_argument("--judge-backend", default="xla",
+                    choices=["xla", "pallas"],
+                    help="traced judge implementation (mesh step / "
+                         "pipelined speculation)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="pipelined engine: overlap oracle judgment with "
+                         "the next round's client compute")
+    ap.add_argument("--local-epochs", type=int, default=1,
+                    help="E local epochs (server engines)")
+    ap.add_argument("--samples-per-client", type=int, default=16,
+                    help="local dataset size per client (server engines)")
+    ap.add_argument("--eps", type=float, default=0.8)
+    ap.add_argument("--mesh", default="host")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.replace(remat="none", param_dtype="float32", dtype="float32")
+    model = build_model(cfg)
+
+    corpus, client_idx = build_fl_corpus(
+        cfg, args.logical_clients, args.case, args.seq_len, args.seed)
+    if args.engine == "mesh":
+        run_mesh_engine(args, cfg, model, corpus, client_idx)
+    else:
+        run_server_engine(args, cfg, model, corpus, client_idx)
 
 
 if __name__ == "__main__":

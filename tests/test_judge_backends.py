@@ -1,0 +1,90 @@
+"""Judge-axis backend parity: ``MaxEntropyJudge(backend=...)`` must agree
+with the float64 numpy oracle across class counts and degenerate inputs.
+
+"xla" is the traced float32 leave-one-out sweep, "pallas" the class-tiled
+``entropy_judge_sweep`` kernel (interpret mode on CPU CI). Agreement is
+exact on verdicts (same greedy, same tolerance) and approximate on the
+entropy value (float32 accumulation vs float64)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.fl as fl
+from repro.core.judgment import judge_np
+
+BACKENDS = ("xla", "pallas")
+
+
+def _soft(rng, m, c, alpha=0.2):
+    return rng.dirichlet(np.full(c, alpha), size=m).astype(np.float32)
+
+
+@pytest.mark.parametrize("c", [10, 100, 1000])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_matches_oracle_across_class_counts(rng, c, backend):
+    m = 8
+    soft = _soft(rng, m, c)
+    sizes = rng.integers(10, 500, m).astype(np.float64)
+    want_a, want_r, want_ent = judge_np(soft, sizes)
+    got_a, got_r, got_ent = fl.MaxEntropyJudge(backend=backend)(soft, sizes)
+    assert got_a == want_a
+    assert got_r == want_r          # greedy-removal ORDER must match too
+    assert got_ent == pytest.approx(want_ent, abs=5e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_single_client(rng, backend):
+    """M=1: the judgment can never empty the set — sole client admitted."""
+    soft = _soft(rng, 1, 10)
+    sizes = np.asarray([42.0])
+    a, r, ent = fl.MaxEntropyJudge(backend=backend)(soft, sizes)
+    assert a == [0] and r == []
+    assert ent == pytest.approx(judge_np(soft, sizes)[2], abs=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_all_zero_rows(rng, backend):
+    """Degenerate soft labels (all-zero rows from dead clients) must not
+    produce NaNs or verdict divergence vs the oracle."""
+    m, c = 6, 100
+    soft = _soft(rng, m, c)
+    soft[1] = 0.0
+    soft[4] = 0.0
+    sizes = np.full(m, 10.0)
+    want_a, want_r, want_ent = judge_np(soft, sizes)
+    got_a, got_r, got_ent = fl.MaxEntropyJudge(backend=backend)(soft, sizes)
+    assert got_a == want_a and got_r == want_r
+    assert np.isfinite(got_ent)
+    assert got_ent == pytest.approx(want_ent, abs=5e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_identical_labels_no_removal(backend):
+    """Identical soft labels: no removal can raise entropy — admit all."""
+    soft = np.tile(np.full((1, 10), 0.1, np.float32), (5, 1))
+    sizes = np.full(5, 7.0)
+    a, r, _ = fl.MaxEntropyJudge(backend=backend)(soft, sizes)
+    assert a == list(range(5)) and r == []
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown judge backend"):
+        fl.MaxEntropyJudge(backend="cuda")
+
+
+def test_traced_forms_agree_with_host_call(rng):
+    """Every registered judge's ``traced()`` returns a JudgmentResult whose
+    mask/order reproduce the host-side __call__ verdict."""
+    m, c = 6, 20
+    soft = _soft(rng, m, c)
+    sizes = rng.integers(5, 50, m).astype(np.float64)
+    for judge in (fl.MaxEntropyJudge(), fl.PassThroughJudge(),
+                  fl.BudgetedJudge(budget=3)):
+        a, r, _ = judge(soft, sizes)
+        res = judge.traced()(jnp.asarray(soft, jnp.float32),
+                             jnp.asarray(sizes, jnp.float32))
+        mask = np.asarray(res.mask)
+        assert [i for i in range(m) if mask[i] > 0] == a
+        if res.removal_order is not None:
+            assert [int(k) for k in np.asarray(res.removal_order)
+                    if k >= 0] == r
