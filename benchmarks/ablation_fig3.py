@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import time
 
-from .common import SEEDS, mean_std, run_method
+from .common import SEEDS, compile_cache_summary, mean_std, run_method
 
 CASE = "case1"
 
@@ -30,4 +30,5 @@ def run(fast: bool = False):
     dt = (time.time() - t0) * 1e6 / (len(seeds) * 3 * rounds)
     rows.append(("fig3b_ablation", f"{dt:.0f}",
                  "|".join(f"{k}={v[0]:.3f}" for k, v in blob.items())))
+    blob["compile_cache"] = compile_cache_summary()
     return rows, blob

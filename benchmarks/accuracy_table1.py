@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 
-from .common import SEEDS, mean_std, run_method
+from .common import SEEDS, compile_cache_summary, mean_std, run_method
 
 CASES = ("case1", "case2", "case3")
 BASELINES = ("fedavg", "fedprox", "scaffold", "moon")
@@ -36,4 +36,5 @@ def run(fast: bool = False):
         rows.append((f"table1_{case}", f"{dt:.0f}",
                      f"fedentropy={stats['fedentropy'][0]:.3f}"
                      f"|best_baseline={best_base:.3f}|delta={delta:+.3f}"))
+    blob["compile_cache"] = compile_cache_summary()
     return rows, blob

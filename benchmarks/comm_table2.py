@@ -9,7 +9,10 @@ from __future__ import annotations
 
 import time
 
-from .common import ROUNDS, SEEDS, mean_std, rounds_to_accuracy, run_method
+from .common import (
+    ROUNDS, SEEDS, compile_cache_summary, mean_std, rounds_to_accuracy,
+    run_method,
+)
 
 TARGETS = {"case1": 0.30, "case2": 0.40, "case3": 0.35}
 
@@ -45,4 +48,5 @@ def run(fast: bool = False):
             f"r2t_avg={stats['rounds_to_target']['fedavg'][0]:.1f}"
             f"|r2t_fe={stats['rounds_to_target']['fedentropy'][0]:.1f}"
             f"|byte_savings={save:.2%}"))
+    blob["compile_cache"] = compile_cache_summary()
     return rows, blob

@@ -1,7 +1,9 @@
 """Engine throughput: sequential ``Server`` vs the runtime engines.
 
-Same composition (fedentropy: pools + maxent + weighted FedAvg on the
-reduced CNN corpus), three drivers:
+Two compositions — fedentropy (pools + maxent + weighted FedAvg) and
+fedcat+maxent (entropy-grouped device chains + maxent + concatenation
+merge, where the *group* is the dispatch unit) on the reduced CNN
+corpus — three drivers each:
 
   * ``sequential``    — ``repro.fl.Server`` (the baseline round loop);
   * ``pipelined``     — ``PipelinedServer``, speculation off (sharding
@@ -49,9 +51,9 @@ ENGINES = {
 
 
 def _build(name: str, setup, local: LocalSpec, num_clients: int,
-           participation: float, apply_fn):
+           participation: float, apply_fn, composition: str = "fedentropy"):
     data, params, _ = setup
-    return fl.build("fedentropy", apply_fn, params, data,
+    return fl.build(composition, apply_fn, params, data,
                     fl.ServerConfig(num_clients=num_clients,
                                     participation=participation, seed=0),
                     local, **ENGINES[name])
@@ -59,7 +61,8 @@ def _build(name: str, setup, local: LocalSpec, num_clients: int,
 
 def time_engines(setup, local: LocalSpec, num_clients: int,
                  participation: float, apply_fn, rounds: int,
-                 repeats: int = 5) -> list[dict]:
+                 repeats: int = 5,
+                 composition: str = "fedentropy") -> list[dict]:
     """Best-of-``repeats`` timed blocks of ``rounds`` rounds per engine,
     INTERLEAVED round-robin across engines so host-load drift hits every
     engine equally (spec-off pipelined runs the identical compiled program
@@ -75,7 +78,8 @@ def time_engines(setup, local: LocalSpec, num_clients: int,
 
     servers = {}
     for name in ENGINES:
-        s = _build(name, setup, local, num_clients, participation, apply_fn)
+        s = _build(name, setup, local, num_clients, participation, apply_fn,
+                   composition)
         s.round()                             # warmup: compile + dispatch
         sync(s)
         servers[name] = s
@@ -125,20 +129,27 @@ def run(fast: bool = False, smoke: bool = False):
 
     enable_process_cache(maxsize=16)
     try:
-        results = time_engines(setup, local, num_clients, participation,
-                               cnn.apply, rounds)
+        sweeps = {"fedentropy": time_engines(
+            setup, local, num_clients, participation, cnn.apply, rounds)}
+        sweeps["fedcat+maxent"] = time_engines(
+            setup, local, num_clients, participation, cnn.apply, rounds,
+            composition="fedcat+maxent")
         cache_stats = process_cache().stats()
     finally:
         disable_process_cache()
 
-    base = next(r for r in results if r["engine"] == "sequential")
-    rows = []
-    for r in results:
-        r["speedup_vs_sequential"] = (r["rounds_per_s"] /
-                                      base["rounds_per_s"])
-        rows.append((f"engine_{r['engine']}",
-                     f"{r['s_per_round'] * 1e6:.0f}",
-                     f"{r['rounds_per_s']:.3f}rps"))
+    rows, results = [], []
+    for comp, res in sweeps.items():
+        base = next(r for r in res if r["engine"] == "sequential")
+        prefix = "engine" if comp == "fedentropy" else "engine_fedcat"
+        for r in res:
+            r["composition"] = comp
+            r["speedup_vs_sequential"] = (r["rounds_per_s"] /
+                                          base["rounds_per_s"])
+            rows.append((f"{prefix}_{r['engine']}",
+                         f"{r['s_per_round'] * 1e6:.0f}",
+                         f"{r['rounds_per_s']:.3f}rps"))
+            results.append(r)
     blob = {"results": results, "compile_cache": cache_stats,
             "num_clients": num_clients, "participation": participation,
             "rounds": rounds, "devices": len(jax.devices()),

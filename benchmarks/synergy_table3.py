@@ -4,12 +4,24 @@ For each strategy S in {fedavg, fedprox, scaffold, moon}: accuracy of S
 alone vs S + FedEntropy (judgment + pools on top of S's local update).
 Validated claim: the grouping improves (or preserves) every optimizer —
 the paper's orthogonality argument.
+
+The fedcat row extends the table beyond the paper with the FedCAT
+device-concatenation composition (arXiv 2202.12751): plain ``fedcat``
+(entropy-grouped chains, no judgment) vs ``fedcat+maxent`` (maximum-
+entropy judgment filtering chain membership before concatenation) — the
+companion-paper synergy the ROADMAP calls for.
+
+CI smoke: ``python -m benchmarks.synergy_table3 --fast --out
+BENCH_synergy.json`` writes the JSON blob (including compile-cache stats)
+as a per-commit artifact.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
-from .common import SEEDS, mean_std, run_method
+from .common import SEEDS, compile_cache_summary, mean_std, run_method
 
 STRATEGIES = ("fedavg", "fedprox", "scaffold", "moon")
 CASE = "case1"           # the paper's headline case for Table 3
@@ -19,20 +31,49 @@ def run(fast: bool = False):
     seeds = SEEDS[:1] if fast else SEEDS
     rounds = 15 if fast else 60
     rows, blob = [], {}
-    for strat in STRATEGIES:
+    variants = [(s, dict(method=s),
+                 dict(method=s, selector="pools", judge="maxent"))
+                for s in STRATEGIES]
+    # beyond-paper row: concatenated chains, plain vs judgment-filtered
+    variants.append(("fedcat", dict(method="fedcat"),
+                     dict(method="fedcat+maxent")))
+    for name, plain_kw, combo_kw in variants:
         plain, combo = [], []
         t0 = time.time()
         for seed in seeds:
             plain.append(run_method(
-                CASE, seed, method=strat, rounds=rounds,
-                eval_every=0)["final_accuracy"])
+                CASE, seed, rounds=rounds, eval_every=0,
+                **plain_kw)["final_accuracy"])
             combo.append(run_method(
-                CASE, seed, method=strat, selector="pools", judge="maxent",
-                rounds=rounds, eval_every=0)["final_accuracy"])
+                CASE, seed, rounds=rounds, eval_every=0,
+                **combo_kw)["final_accuracy"])
         dt = (time.time() - t0) * 1e6 / (len(seeds) * 2 * rounds)
         p, c = mean_std(plain), mean_std(combo)
-        blob[strat] = {"plain": p, "with_fedentropy": c}
-        rows.append((f"table3_{strat}", f"{dt:.0f}",
+        blob[name] = {"plain": p, "with_fedentropy": c}
+        rows.append((f"table3_{name}", f"{dt:.0f}",
                      f"plain={p[0]:.3f}|+fedentropy={c[0]:.3f}"
                      f"|delta={c[0] - p[0]:+.3f}"))
+    blob["compile_cache"] = compile_cache_summary()
     return rows, blob
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="1 seed, 15 rounds (CI smoke)")
+    ap.add_argument("--out", default="",
+                    help="write the JSON blob here (BENCH_synergy.json)")
+    args = ap.parse_args()
+    rows, blob = run(fast=args.fast)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)
+    print("compile cache:", blob["compile_cache"])
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(blob, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

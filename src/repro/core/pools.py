@@ -10,12 +10,20 @@ not part of the jitted step. Semantics follow the paper exactly:
   the other pool (Sec. 3.4);
 * selected devices are removed from their pools for the round and re-filed
   according to the judgment verdict (positives -> positive pool, ...).
+
+Shared label-distribution stats live here too: :func:`label_histograms`,
+:func:`hist_entropy`, and :func:`greedy_entropy_groups` — the control-plane
+inputs for FedCAT-style device concatenation (arXiv 2202.12751), where
+devices are packed into ordered groups whose combined label distribution
+is as close to uniform (maximum entropy) as a greedy pass can make it.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from .entropy import entropy_np
 
 
 @dataclass
@@ -62,3 +70,62 @@ class DevicePools:
 
     def stats(self) -> dict:
         return {"positive": len(self.positive), "negative": len(self.negative)}
+
+
+# ---- label-distribution stats (FedCAT grouping inputs) -------------------
+
+def label_histograms(y: np.ndarray, w: np.ndarray | None = None,
+                     num_classes: int | None = None) -> np.ndarray:
+    """Per-device weighted label counts: (N, S) labels -> (N, C) histograms.
+
+    ``w`` is the per-sample weight mask ``stack_clients`` produces (padded
+    samples carry weight 0, so they never count toward a distribution).
+    """
+    y = np.asarray(y)
+    w = (np.ones(y.shape, np.float64) if w is None
+         else np.asarray(w, np.float64))
+    c = int(num_classes) if num_classes else int(y.max()) + 1
+    hists = np.zeros((y.shape[0], c), np.float64)
+    for i in range(y.shape[0]):
+        hists[i] = np.bincount(y[i].reshape(-1),
+                               weights=w[i].reshape(-1), minlength=c)[:c]
+    return hists
+
+
+def hist_entropy(hist: np.ndarray) -> float:
+    """Shannon entropy (nats) of a count histogram; empty -> 0."""
+    tot = float(np.sum(hist))
+    if tot <= 0.0:
+        return 0.0
+    return float(entropy_np(np.asarray(hist, np.float64) / tot))
+
+
+def greedy_entropy_groups(hists: np.ndarray,
+                          group_size: int) -> list[list[int]]:
+    """Partition rows into ordered groups of ``group_size``, greedily
+    maximizing each group's combined label entropy (FedCAT grouping).
+
+    Each group is seeded with the most label-skewed device left, then grown
+    by the device whose addition raises the pooled histogram's entropy the
+    most. Purely deterministic (ties break to the lowest index): the same
+    histograms always produce the same groups, which is what lets chain
+    dispatches be speculated and replayed bit-for-bit. The final group may
+    be smaller when ``group_size`` does not divide the row count.
+    """
+    n = len(hists)
+    k = max(1, int(group_size))
+    remaining = list(range(n))
+    groups: list[list[int]] = []
+    while remaining:
+        seed = min(remaining, key=lambda i: (hist_entropy(hists[i]), i))
+        remaining.remove(seed)
+        group = [seed]
+        acc = np.array(hists[seed], np.float64)
+        while len(group) < k and remaining:
+            best = max(remaining,
+                       key=lambda i: (hist_entropy(acc + hists[i]), -i))
+            remaining.remove(best)
+            group.append(best)
+            acc += hists[best]
+        groups.append(group)
+    return groups

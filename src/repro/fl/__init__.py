@@ -6,14 +6,18 @@ Paper Alg. 2 decomposed into four independently swappable axes, each a
 =============  ====================================  ======================
 axis           question it answers                   built-ins
 =============  ====================================  ======================
-``Selector``   who is asked to train this round      ``pools``, ``uniform``
+``Selector``   who is asked to train this round      ``pools``, ``uniform``,
+                                                     ``catgroups``,
+                                                     ``catgroups-pools``
 ``ClientStrategy``  how each client trains locally   ``fedavg``,
                                                      ``fedprox``,
-                                                     ``scaffold``, ``moon``
+                                                     ``scaffold``, ``moon``,
+                                                     ``catchain``
 ``Judge``      whose update is admitted              ``maxent``, ``none``,
                                                      ``budget``
 ``Aggregator`` how admitted updates merge            ``weighted``,
-                                                     ``scaffold``
+                                                     ``scaffold``,
+                                                     ``devconcat``
 =============  ====================================  ======================
 
 A fifth registry kind, ``engine``, picks the round *driver* for a
@@ -56,26 +60,32 @@ old (``FedEntropyTrainer`` + ``FLConfig``)             new (``repro.fl``)
 =====================================================  ====================
 """
 from ..core.strategies import LocalSpec
-from .aggregators import ScaffoldAggregator, WeightedAverageAggregator
+from .aggregators import (
+    DeviceConcatAggregator, ScaffoldAggregator, WeightedAverageAggregator,
+)
 from .judges import BudgetedJudge, MaxEntropyJudge, PassThroughJudge
 from .protocols import Aggregator, ClientStrategy, Judge, Selector
 from .registry import Composition, build, get, names, register
-from .selectors import PoolSelector, UniformSelector
+from .selectors import (
+    CatGrouper, PoolCatGrouper, PoolSelector, UniformSelector,
+)
 from .server import (
     BoundedJitCache, Server, ServerConfig, total_uplink_bytes,
 )
 from .strategies import (
-    FedAvgStrategy, FedProxStrategy, MoonStrategy, ScaffoldStrategy,
+    CatChainStrategy, FedAvgStrategy, FedProxStrategy, MoonStrategy,
+    ScaffoldStrategy,
 )
 from . import runtime  # noqa: E402 — registers engines; after .server
 from .runtime import PipelinedServer, RuntimeConfig
 
 __all__ = [
-    "Aggregator", "BoundedJitCache", "BudgetedJudge", "ClientStrategy",
-    "Composition", "FedAvgStrategy", "FedProxStrategy", "Judge", "LocalSpec",
+    "Aggregator", "BoundedJitCache", "BudgetedJudge", "CatChainStrategy",
+    "CatGrouper", "ClientStrategy", "Composition", "DeviceConcatAggregator",
+    "FedAvgStrategy", "FedProxStrategy", "Judge", "LocalSpec",
     "MaxEntropyJudge", "MoonStrategy", "PassThroughJudge", "PipelinedServer",
-    "PoolSelector", "RuntimeConfig", "ScaffoldAggregator", "ScaffoldStrategy",
-    "Selector", "Server", "ServerConfig", "UniformSelector",
-    "WeightedAverageAggregator", "build", "get", "names", "register",
-    "runtime", "total_uplink_bytes",
+    "PoolCatGrouper", "PoolSelector", "RuntimeConfig", "ScaffoldAggregator",
+    "ScaffoldStrategy", "Selector", "Server", "ServerConfig",
+    "UniformSelector", "WeightedAverageAggregator", "build", "get", "names",
+    "register", "runtime", "total_uplink_bytes",
 ]

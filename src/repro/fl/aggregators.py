@@ -4,10 +4,14 @@
                                 mask (``core.aggregation.aggregate``).
 ``ScaffoldAggregator``        — the same average, then the SCAFFOLD damped
                                 server step w_g <- w_g + eta_g*(avg - w_g).
+``DeviceConcatAggregator``    — FedCAT (arXiv 2202.12751): identity within
+                                a chain, size-weighted average across the
+                                chains' representative models.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from ..core.aggregation import aggregate
 from .registry import register
@@ -42,3 +46,51 @@ class ScaffoldAggregator:
         return jax.tree.map(
             lambda wg, ag: wg + eta * (ag.astype(wg.dtype) - wg),
             global_params, avg)
+
+
+@register("aggregator", "devconcat")
+class DeviceConcatAggregator:
+    """FedCAT merge: one model per chain, size-weighted across chains.
+
+    ``out`` rows are per-device chain-stage outputs (device i's params are
+    the chain state after i trained), annotated with ``group_id``/
+    ``chain_pos`` by ``CatChainStrategy``. Within a chain the merge is the
+    identity: the deepest stage whose admitted prefix is unbroken IS the
+    group's model — it already contains its predecessors' training. Across
+    chains those representatives average weighted by their admitted-prefix
+    data sizes. Judgment therefore filters chain membership *before*
+    concatenation: a rejected device truncates its chain at the last stage
+    it never touched. A chain whose first device is rejected contributes
+    nothing; if every chain is emptied the global model is kept unchanged.
+
+    With group size 1 every device is its own chain and this reduces
+    exactly (bit-for-bit) to ``WeightedAverageAggregator``. Cohorts
+    without chain annotations degrade to the same plain weighted average.
+    """
+
+    @classmethod
+    def from_config(cls, config, local):
+        return cls()
+
+    def __call__(self, global_params, out, sizes, mask):
+        if "group_id" not in out:        # not a chain cohort: plain FedAvg
+            return aggregate(out["params"], sizes, mask)
+        gid, pos = out["group_id"], out["chain_pos"]
+        m = jnp.asarray(mask, jnp.float32)
+        same = gid[None, :] == gid[:, None]
+        prefix = same & (pos[None, :] <= pos[:, None])
+        # ok[i]: every chain stage up to and including i was admitted
+        ok = jnp.all(jnp.where(prefix, m > 0, True), axis=1)
+        # the deepest unbroken stage represents its chain
+        deeper = same & (pos[None, :] > pos[:, None])
+        rep = (ok & ~jnp.any(deeper & ok[None, :], axis=1)).astype(
+            jnp.float32)
+        # chain weight: total data size along the admitted prefix
+        w = jnp.sum(jnp.where(prefix,
+                              jnp.asarray(sizes, jnp.float32)[None, :],
+                              0.0), axis=1)
+        avg = aggregate(out["params"], w, rep)
+        kept = jnp.sum(w * rep) > 0
+        return jax.tree.map(
+            lambda ag, wg: jnp.where(kept, ag, wg.astype(ag.dtype)),
+            avg, global_params)

@@ -136,3 +136,12 @@ register("composition", "fedprox", Composition(strategy="fedprox"))
 register("composition", "moon", Composition(strategy="moon"))
 register("composition", "scaffold",
          Composition(strategy="scaffold", aggregator="scaffold"))
+# FedCAT (arXiv 2202.12751): entropy-grouped device chains, concatenation
+# merge; "+maxent" filters chain membership with the paper's judgment
+# before concatenation (the FedEntropy-synergy variant).
+register("composition", "fedcat",
+         Composition(strategy="catchain", selector="catgroups",
+                     judge="none", aggregator="devconcat"))
+register("composition", "fedcat+maxent",
+         Composition(strategy="catchain", selector="catgroups-pools",
+                     judge="maxent", aggregator="devconcat"))

@@ -105,13 +105,17 @@ class PipelinedServer(Server):
         if not self._shard_enabled():
             return super()._client_fn()
         mesh = self.client_mesh()
-        key = ("sharded",) + self._client_key()[1:] + (
+        key = ("sharded",) + self._client_key() + (
             mesh.shape[CLIENT_AXIS], self.runtime.donate_data)
+        make = getattr(self.strategy, "make_client_fn", None)
         return self._compile_cache().get(
             key, lambda: make_sharded_client_fn(
                 self.apply_fn, self.strategy.spec,
                 self.strategy.client_in_axes(), mesh,
-                donate_data=self.runtime.donate_data))
+                donate_data=self.runtime.donate_data,
+                # chain strategies shard whole groups, not devices: the
+                # inner fn's leading axis is the group axis
+                inner=None if make is None else make(self.apply_fn)))
 
     # -------------------------------------------------------- speculation
     def _traced_judge_fn(self):
@@ -133,13 +137,14 @@ class PipelinedServer(Server):
         return self._compile_cache().get(
             ("spec-judge", self.judge, self.runtime.spec_backend), make)
 
-    def _dispatch(self, sel):
-        """Slice the cohort and launch its client compute (async)."""
-        idx = np.asarray(sel)
-        data = {k: v[idx] for k, v in self.data.items()}
-        prev_p, c_loc, c_glob = self.strategy.client_inputs(self.state, idx)
-        return self._client_fn()(self.global_params, data,
-                                 prev_p, c_loc, c_glob)
+    def _dispatch(self, sel, selector=None, global_params=None):
+        """Launch a cohort's client compute (async). ``selector`` is whoever
+        produced ``sel`` — under speculation a throwaway copy whose group
+        assignment must ride with this dispatch (the group is the dispatch
+        unit), never the server's own selector."""
+        return self._run_cohort(
+            sel, self.selector if selector is None else selector,
+            global_params)
 
     # ------------------------------------------------------------- rounds
     def round(self) -> dict:
@@ -185,15 +190,16 @@ class PipelinedServer(Server):
             # set-based, so only the SET must match the oracle verdict
             spec_neg = [sel[i] for i in range(len(sel))
                         if spec_mask[i] == 0]
+        # state folding is mask-independent (Alg. 2): adopt it before the
+        # speculative dispatch, which slices its client inputs from it
+        self.state = new_state
         sel_copy = copy.deepcopy(self.selector)
         sel_copy.update(spec_pos, spec_neg)
         next_sel = sel_copy.select(num)
-        next_idx = np.asarray(next_sel)
-        next_data = {k: v[next_idx] for k, v in self.data.items()}
-        prev_p, c_loc, c_glob = self.strategy.client_inputs(
-            new_state, next_idx)
-        next_out = self._client_fn()(new_global_spec, next_data,
-                                     prev_p, c_loc, c_glob)
+        # group assignment rides with the dispatch: sel_copy made (and, for
+        # chain strategies, grouped) this selection, so it is the selector
+        # the cohort layout is read from
+        next_out = self._dispatch(next_sel, sel_copy, new_global_spec)
 
         # --- float64 oracle on host, overlapping the in-flight compute ---
         soft = np.asarray(out["soft_label"], np.float64)
@@ -202,7 +208,6 @@ class PipelinedServer(Server):
         mask = np.zeros(len(sel), np.float32)
         mask[a_rel] = 1.0
 
-        self.state = new_state
         hit = bool(np.array_equal(mask, spec_mask))
         if hit:
             self.global_params = new_global_spec

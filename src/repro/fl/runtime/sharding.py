@@ -61,18 +61,26 @@ def pad_to_multiple(tree, multiple: int):
 
 
 def make_sharded_client_fn(apply_fn: ApplyFn, spec, in_axes, mesh: Mesh,
-                           *, donate_data: bool = True):
+                           *, donate_data: bool = True, inner=None):
     """shard_map'd + jitted ClientUpdate over the ("clients",) mesh axis.
 
-    Returns ``fn(global_params, data, prev_p, c_loc, c_glob)`` with the
-    same signature/semantics as ``Server._client_fn()`` — including the
+    Returns ``fn(global_params, data, prev_p, c_loc, c_glob, ...)`` with
+    the same signature/semantics as ``Server._client_fn()`` — including the
     leading-axis length of the result (padding is internal). ``in_axes``
     is the strategy's vmap spec; axis-0 arguments shard over the mesh,
     None arguments replicate.
+
+    ``inner`` swaps the vmapped default for a strategy-built fn (FedCAT
+    chains) taking one extra trailing axis-0 array (the chain validity
+    mask). Its leading axis is then the GROUP axis: whole chains shard
+    onto devices, never individual chain stages, and mesh padding repeats
+    whole groups whose (dropped) outputs cannot leak into real chains.
     """
-    vm = _make_client_fn(apply_fn, spec, in_axes)
+    vm = inner if inner is not None else _make_client_fn(apply_fn, spec,
+                                                         in_axes)
+    axes = tuple(in_axes) + ((0,) if inner is not None else ())
     n = mesh.shape[CLIENT_AXIS]
-    in_specs = tuple(P(CLIENT_AXIS) if ax == 0 else P() for ax in in_axes)
+    in_specs = tuple(P(CLIENT_AXIS) if ax == 0 else P() for ax in axes)
     mapped = shard_map(vm, mesh=mesh, in_specs=in_specs,
                        out_specs=P(CLIENT_AXIS), check_rep=False)
     # the per-round data slices are fresh buffers — donating them lets XLA
@@ -81,12 +89,12 @@ def make_sharded_client_fn(apply_fn: ApplyFn, spec, in_axes, mesh: Mesh,
     donate_data = donate_data and jax.default_backend() != "cpu"
     jitted = jax.jit(mapped, donate_argnums=(1,) if donate_data else ())
 
-    def call(global_params, data, prev_p, c_loc, c_glob):
+    def call(global_params, data, *rest):
         m = jax.tree.leaves(data)[0].shape[0]
-        args = (global_params, data, prev_p, c_loc, c_glob)
+        args = (global_params, data) + rest
         padded = tuple(
             pad_to_multiple(a, n) if ax == 0 and a is not None else a
-            for a, ax in zip(args, in_axes))
+            for a, ax in zip(args, axes))
         out = jitted(*padded)
         if jax.tree.leaves(out)[0].shape[0] == m:
             return out

@@ -7,6 +7,12 @@
                       ``use_pools=False`` ablation of Fig. 3b). Seeded with
                       ``seed + 1`` by the registry to match the legacy
                       trainer's RNG stream exactly.
+``CatGrouper``      — FedCAT (arXiv 2202.12751) device grouping layered
+                      over an inner selector: WHO trains is delegated, and
+                      the selection is additionally packed into ordered
+                      groups via ``core.pools.greedy_entropy_groups``;
+                      ``catgroups`` wraps ``uniform`` (plain fedcat),
+                      ``catgroups-pools`` wraps ``pools`` (fedcat+maxent).
 """
 from __future__ import annotations
 
@@ -14,7 +20,7 @@ from typing import Sequence
 
 import numpy as np
 
-from ..core.pools import DevicePools
+from ..core.pools import DevicePools, greedy_entropy_groups, label_histograms
 from .registry import register
 
 
@@ -67,3 +73,71 @@ class UniformSelector:
         # no pool bookkeeping exists; don't fabricate positive/negative
         # counts that could be mistaken for judgment outcomes
         return {"selector": "uniform", "num_clients": self.num_clients}
+
+
+@register("selector", "catgroups")
+class CatGrouper:
+    """FedCAT device grouping over an inner selector (default uniform).
+
+    ``select`` delegates to ``inner`` (so the draw stream — and therefore
+    fixed-seed histories — matches the wrapped selector exactly), then
+    packs the selection into ordered groups of ``group_size`` whose pooled
+    label distributions are greedily entropy-maximized. The server binds
+    the client corpus at construction (:meth:`bind_data`), which is where
+    the per-device label histograms come from; an unbound grouper falls
+    back to chaining devices in selection order.
+
+    ``last_groups`` holds the current round's groups as lists of *relative*
+    indices into the selection — the contract ``CatChainStrategy`` and
+    ``DeviceConcatAggregator`` consume. Grouping is deterministic in the
+    selection, so a speculative re-selection on a selector copy reproduces
+    identical chains.
+    """
+
+    inner_cls = UniformSelector
+
+    def __init__(self, inner, group_size: int = 2):
+        self.inner = inner
+        self.group_size = max(1, int(group_size))
+        self._hists: np.ndarray | None = None
+        self.last_groups: list[list[int]] | None = None
+
+    @classmethod
+    def from_config(cls, config, local):
+        return cls(cls.inner_cls.from_config(config, local),
+                   config.group_size)
+
+    def bind_data(self, client_data: dict) -> None:
+        """Record per-device label histograms from the stacked corpus."""
+        self._hists = label_histograms(np.asarray(client_data["y"]),
+                                       np.asarray(client_data["w"]))
+
+    def select(self, num: int) -> list[int]:
+        sel = self.inner.select(num)
+        if self._hists is not None:
+            hists = self._hists[np.asarray(sel)]
+        else:
+            # unbound: degenerate one-class histograms -> groups chain the
+            # selection in index order (still a valid partition)
+            hists = np.ones((len(sel), 1))
+        self.last_groups = greedy_entropy_groups(hists, self.group_size)
+        return sel
+
+    def update(self, positives: Sequence[int],
+               negatives: Sequence[int]) -> None:
+        self.inner.update(positives, negatives)
+
+    def stats(self) -> dict:
+        s = dict(self.inner.stats())
+        s["group_size"] = self.group_size
+        if self.last_groups is not None:
+            s["num_groups"] = len(self.last_groups)
+        return s
+
+
+@register("selector", "catgroups-pools")
+class PoolCatGrouper(CatGrouper):
+    """CatGrouper over the paper's epsilon-greedy pools: judgment feedback
+    re-files chain members, the synergy half of ``fedcat+maxent``."""
+
+    inner_cls = PoolSelector

@@ -35,6 +35,7 @@ class ServerConfig:
     eps: float = 0.8                # paper epsilon (eps-greedy selectors)
     seed: int = 0
     jit_cache_size: int = 4         # per-server compiled-program LRU bound
+    group_size: int = 2             # FedCAT chain length (catgroups/catchain)
 
 
 class BoundedJitCache:
@@ -103,6 +104,11 @@ class Server:
         self.round_idx = 0
         self.history: list[dict] = []
         self._jit_cache = BoundedJitCache(config.jit_cache_size)
+        # selectors that stat the corpus (e.g. CatGrouper's label
+        # histograms) bind it once here — control-plane, host-side
+        bind = getattr(selector, "bind_data", None)
+        if bind is not None:
+            bind(client_data)
 
     # ------------------------------------------------------------------
     def _compile_cache(self):
@@ -117,13 +123,21 @@ class Server:
     def _client_key(self) -> tuple:
         # the apply_fn itself (identity hash) keys the entry — embedding
         # the object rather than id() pins it for the cache's lifetime,
-        # so a GC'd callable can never alias a reused address
-        return ("client", self.apply_fn, self.strategy.spec,
+        # so a GC'd callable can never alias a reused address. Strategies
+        # that build their own client fn (chains) key on their class so a
+        # vmapped program can never serve a chain cohort or vice versa.
+        tag = ("client" if getattr(self.strategy, "make_client_fn", None)
+               is None else f"client-{type(self.strategy).__name__}")
+        return (tag, self.apply_fn, self.strategy.spec,
                 self.strategy.client_in_axes(),
                 tuple((k, v.shape, str(v.dtype))
                       for k, v in sorted(self.data.items())))
 
     def _client_fn(self):
+        make = getattr(self.strategy, "make_client_fn", None)
+        if make is not None:
+            return self._compile_cache().get(
+                self._client_key(), lambda: jax.jit(make(self.apply_fn)))
         return self._compile_cache().get(
             self._client_key(), lambda: jax.jit(_make_client_fn(
                 self.apply_fn, self.strategy.spec,
@@ -135,17 +149,34 @@ class Server:
             ("eval", fn), lambda: jax.jit(lambda p, bx: fn(p, bx)[0]))
 
     # ------------------------------------------------------------------
+    def _run_cohort(self, sel, selector, global_params=None):
+        """Slice, lay out, and launch the cohort's client compute (async).
+
+        Group-aware strategies (``prepare_round``) re-lay the sliced
+        cohort into chain groups read off ``selector`` — the selector that
+        produced ``sel``, which under speculation may be a throwaway copy:
+        the group, not the device, is the dispatch unit, and its structure
+        is captured at dispatch time.
+        """
+        gp = self.global_params if global_params is None else global_params
+        idx = np.asarray(sel)
+        data = {k: v[idx] for k, v in self.data.items()}
+        prev_p, c_loc, c_glob = self.strategy.client_inputs(self.state, idx)
+        prep = getattr(self.strategy, "prepare_round", None)
+        if prep is None:
+            return self._client_fn()(gp, data, prev_p, c_loc, c_glob)
+        gdata, aux = prep(data, selector)
+        out = self._client_fn()(gp, gdata, prev_p, c_loc, c_glob,
+                                aux["valid"])
+        return self.strategy.finish_round(out, aux)
+
     def round(self) -> dict:
         """One paper Alg. 2 round; returns the history record."""
         cfg = self.config
         num = max(1, int(round(cfg.num_clients * cfg.participation)))
         sel = self.selector.select(num)
         idx = np.asarray(sel)
-        data = {k: v[idx] for k, v in self.data.items()}
-
-        prev_p, c_loc, c_glob = self.strategy.client_inputs(self.state, idx)
-        out = self._client_fn()(self.global_params, data,
-                                prev_p, c_loc, c_glob)
+        out = self._run_cohort(sel, self.selector)
 
         soft = np.asarray(out["soft_label"], np.float64)   # (|S_t|, C)
         sizes = np.asarray(out["size"], np.float64)

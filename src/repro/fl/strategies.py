@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.strategies import LocalSpec
+from ..core.strategies import LocalSpec, client_update
 from .registry import register
 
 
@@ -95,6 +95,100 @@ class MoonStrategy(_StatelessStrategy):
         return {"prev_params": jax.tree.map(
             lambda full, new: full.at[idx].set(new),
             state["prev_params"], out["params"])}
+
+
+@register("strategy", "catchain")
+class CatChainStrategy(_StatelessStrategy):
+    """FedCAT device-concatenation chains (arXiv 2202.12751).
+
+    The round's cohort is partitioned into the Selector's ordered groups
+    (``last_groups``); within a group the devices train *sequentially* —
+    each from its predecessor's output params, the first from the global
+    model — expressed as a ``jax.lax.scan`` over the chain axis inside a
+    ``vmap`` over groups, so the program stays jittable and shard_map
+    partitions it over the group axis. The local rule is plain FedAvg SGD
+    (the paper's); pair with ``DeviceConcatAggregator``.
+
+    Ragged groups are padded to the longest chain by repeating the last
+    member's data; padded stages carry ``valid=0`` and are select-masked to
+    the identity inside the scan, so padding can never leak into a chain.
+    Per-device outputs (the chain state after that device trained, its soft
+    label and size) are returned in original cohort order with
+    ``group_id``/``chain_pos`` annotations for the aggregator and judge.
+    """
+
+    name = "catchain"
+
+    def __init__(self, spec: LocalSpec | None = None, group_size: int = 2):
+        super().__init__(spec)
+        self.group_size = max(1, int(group_size))
+
+    @classmethod
+    def from_config(cls, config, local):
+        return cls(local, config.group_size)
+
+    # ---- group layout (control plane, host-side numpy) ------------------
+    def prepare_round(self, data: dict, selector) -> tuple[dict, dict]:
+        """Lay the sliced cohort out as (G, K, S, ...) chain groups."""
+        n = data["x"].shape[0]
+        groups = getattr(selector, "last_groups", None)
+        if not groups:
+            k = self.group_size
+            groups = [list(range(i, min(i + k, n)))
+                      for i in range(0, n, k)]
+        k = max(len(g) for g in groups)
+        perm = np.zeros((len(groups), k), np.int64)
+        valid = np.zeros((len(groups), k), np.float32)
+        gid = np.zeros(n, np.int32)
+        pos = np.zeros(n, np.int32)
+        inv = np.zeros(n, np.int64)
+        for g, members in enumerate(groups):
+            for j in range(k):
+                perm[g, j] = members[min(j, len(members) - 1)]
+                valid[g, j] = 1.0 if j < len(members) else 0.0
+            for j, m in enumerate(members):
+                gid[m], pos[m], inv[m] = g, j, g * k + j
+        flat = perm.reshape(-1)
+        gdata = {key: v[flat].reshape(perm.shape + v.shape[1:])
+                 for key, v in data.items()}
+        aux = {"valid": jnp.asarray(valid), "inv": inv,
+               "group_id": jnp.asarray(gid), "chain_pos": jnp.asarray(pos)}
+        return gdata, aux
+
+    # ---- data plane ------------------------------------------------------
+    def make_client_fn(self, apply_fn):
+        spec = self.spec
+
+        def chain_fn(global_params, gdata, prev_p, c_loc, c_glob, valid):
+            del prev_p, c_loc, c_glob        # chains are stateless FedAvg
+
+            def one_group(gd, gv):
+                def stage(carry, inp):
+                    d = {k: inp[k] for k in ("x", "y", "w")}
+                    o = client_update(apply_fn, carry, d, spec)
+                    newp = jax.tree.map(
+                        lambda a, b: jnp.where(inp["_valid"] > 0, a, b),
+                        o["params"], carry)
+                    return newp, {"params": newp,
+                                  "soft_label": o["soft_label"],
+                                  "size": o["size"]}
+
+                xs = dict(gd)
+                xs["_valid"] = gv
+                _, stages = jax.lax.scan(stage, global_params, xs)
+                return stages
+
+            return jax.vmap(one_group)(gdata, valid)
+
+        return chain_fn
+
+    def finish_round(self, out: dict, aux: dict) -> dict:
+        """(G, K, ...) stage outputs -> (|S_t|, ...) in cohort order."""
+        res = jax.tree.map(
+            lambda x: x.reshape((-1,) + x.shape[2:])[aux["inv"]], out)
+        res["group_id"] = aux["group_id"]
+        res["chain_pos"] = aux["chain_pos"]
+        return res
 
 
 @register("strategy", "scaffold")

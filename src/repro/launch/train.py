@@ -90,7 +90,8 @@ def _components(args, *, host_oracle: bool):
     config = fl.ServerConfig(num_clients=args.logical_clients,
                              participation=args.clients /
                              max(args.logical_clients, 1),
-                             eps=args.eps, seed=args.seed)
+                             eps=args.eps, seed=args.seed,
+                             group_size=args.group_size)
     selector = sel_cls.from_config(config=config, local=None)
     if args.judge == "maxent":
         judge = fl.MaxEntropyJudge(
@@ -145,14 +146,26 @@ def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
                             args.seq_len, args.seed)
     runtime = fl.RuntimeConfig(speculate=args.speculate,
                                spec_backend=args.judge_backend)
-    composition = "fedavg" if args.no_fedentropy else "fedentropy"
+    if args.method:
+        # named composition (e.g. fedcat): its own selector/judge axes
+        # resolve from the registry via config (--group-size sizes chains);
+        # refuse explicit axis flags rather than silently dropping them
+        if args.selector != "pools" or args.judge != "maxent":
+            raise SystemExit(
+                f"--method {args.method} names a full composition; drop "
+                "--selector/--judge (compose axes via the legacy flags "
+                "without --method instead)")
+        composition, selector, judge = args.method, None, None
+    else:
+        composition = "fedavg" if args.no_fedentropy else "fedentropy"
+        if args.no_fedentropy:
+            judge = None
     server = fl.build(
         composition, lm_client_apply(model, cfg), model.init(
             jax.random.PRNGKey(args.seed)), data, config,
         fl.LocalSpec(epochs=args.local_epochs, lr=args.lr,
                      batch_size=args.per_client_batch),
-        selector=selector,
-        judge=judge if not args.no_fedentropy else None,
+        selector=selector, judge=judge,
         engine=args.engine, runtime=runtime)
     t0 = time.time()
     for it in range(args.steps):
@@ -245,6 +258,14 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
     ap.add_argument("--no-fedentropy", action="store_true")
+    ap.add_argument("--method", default="",
+                    choices=["", "fedentropy", "fedavg", "fedcat",
+                             "fedcat+maxent"],
+                    help="named repro.fl composition (server engines); "
+                         "fedcat chains grouped devices sequentially, "
+                         "fedcat+maxent filters chains with judgment")
+    ap.add_argument("--group-size", type=int, default=2,
+                    help="FedCAT chain length (fedcat compositions)")
     ap.add_argument("--engine", default="mesh",
                     choices=["mesh", "sequential", "pipelined"],
                     help="mesh = gradient-level jitted step; sequential/"
@@ -280,6 +301,14 @@ def main() -> None:
     corpus, client_idx = build_fl_corpus(
         cfg, args.logical_clients, args.case, args.seq_len, args.seed)
     if args.engine == "mesh":
+        if args.method:
+            # the gradient-level step has no composition axis to honor a
+            # named recipe (fedcat chains thread whole models); refusing
+            # beats silently running the default fedentropy path
+            raise SystemExit(
+                f"--method {args.method} needs a weights-level engine: "
+                "use --engine sequential or pipelined (the mesh engine "
+                "is composed via --no-fedentropy/--selector/--judge)")
         run_mesh_engine(args, cfg, model, corpus, client_idx)
     else:
         run_server_engine(args, cfg, model, corpus, client_idx)

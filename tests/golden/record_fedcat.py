@@ -1,0 +1,70 @@
+"""Record tests/golden/fedcat_history.json from the sequential ``Server``.
+
+Run from the repo root after any INTENTIONAL change to fedcat round
+semantics (never to paper over a regression):
+
+    PYTHONPATH=src python tests/golden/record_fedcat.py
+
+The fixture mirrors tests/test_fedcat.py's ``tiny`` exactly; histories are
+recorded from the sequential engine so the pipelined/sharded/speculative
+engines are all held to the same reference.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.data.partition import partition, stack_clients
+from repro.data.synthetic import make_image_dataset
+from repro.models import cnn
+
+ROUNDS = 5
+VARIANTS = {"fedcat": "fedcat", "fedcat_maxent": "fedcat+maxent"}
+OUT = os.path.join(os.path.dirname(__file__), "fedcat_history.json")
+
+
+def tiny():
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=4, train_per_class=60, test_per_class=15, hw=16,
+        noise=0.4, seed=0)
+    parts = partition("case1", ytr, 8, 4, seed=0)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=20)
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=16, num_classes=4)
+    return data, params
+
+
+def digest(params) -> float:
+    return float(sum(float(jnp.sum(jnp.abs(x)))
+                     for x in jax.tree.leaves(params)))
+
+
+def main() -> None:
+    data, params = tiny()
+    blob = {}
+    for key, comp in VARIANTS.items():
+        server = fl.build(comp, cnn.apply, params, data,
+                          fl.ServerConfig(num_clients=8, participation=0.5,
+                                          seed=0, group_size=2),
+                          LocalSpec(epochs=1, batch_size=20))
+        records = []
+        for _ in range(ROUNDS):
+            rec = server.round()
+            records.append({
+                "round": rec["round"], "selected": rec["selected"],
+                "positive": rec["positive"], "negative": rec["negative"],
+                "entropy": repr(rec["entropy"]),
+                "total_bytes": rec["comm"]["total_bytes"],
+                "groups": server.selector.last_groups,
+            })
+        blob[key] = {"history": records,
+                     "params_digest": repr(digest(server.global_params))}
+    with open(OUT, "w") as f:
+        json.dump(blob, f, indent=1)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

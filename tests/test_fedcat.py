@@ -1,0 +1,212 @@
+"""FedCAT device-concatenation compositions: golden-history regression of
+``Server`` vs ``PipelinedServer`` (speculation on AND off, forced shard),
+the group-size-1 reduction to plain fedavg, chain-truncating judgment,
+and misspeculation fallback with group dispatch."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.data.partition import partition, stack_clients
+from repro.data.synthetic import make_image_dataset
+from repro.fl.runtime import RuntimeConfig
+from repro.models import cnn
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "fedcat_history.json")
+GOLDEN_SEED = os.path.join(os.path.dirname(__file__), "golden",
+                           "seed_history.json")
+
+# composition name per golden variant (recorded by golden/record_fedcat.py)
+_VARIANTS = {"fedcat": "fedcat", "fedcat_maxent": "fedcat+maxent"}
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """Identical to the setup the golden histories were recorded with."""
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=4, train_per_class=60, test_per_class=15, hw=16,
+        noise=0.4, seed=0)
+    parts = partition("case1", ytr, 8, 4, seed=0)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=20)
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=16, num_classes=4)
+    return data, params
+
+
+def _params_digest(params) -> float:
+    return float(sum(float(jnp.sum(jnp.abs(x)))
+                     for x in jax.tree.leaves(params)))
+
+
+def _build(tiny, name="fedcat", engine=None, runtime=None, group_size=2,
+           **overrides):
+    data, params = tiny
+    return fl.build(name, cnn.apply, params, data,
+                    fl.ServerConfig(num_clients=8, participation=0.5,
+                                    seed=0, group_size=group_size),
+                    LocalSpec(epochs=1, batch_size=20),
+                    engine=engine, runtime=runtime, **overrides)
+
+
+def _assert_matches_golden(history, golden, *, groups=None):
+    assert len(history) == len(golden)
+    for g, w in zip(history, golden):
+        assert g["selected"] == w["selected"]
+        assert g["positive"] == w["positive"]
+        assert g["negative"] == w["negative"]
+        assert g["comm"]["total_bytes"] == w["total_bytes"]
+        ent = float(w["entropy"])
+        if np.isnan(ent):
+            assert np.isnan(g["entropy"])
+        else:
+            assert g["entropy"] == pytest.approx(ent, abs=1e-9)
+    if groups is not None:
+        assert groups == golden[-1]["groups"]
+
+
+# ----------------------------------------------------- golden equivalence
+
+@pytest.mark.parametrize("variant", sorted(_VARIANTS))
+def test_sequential_server_matches_golden(tiny, variant):
+    with open(GOLDEN) as f:
+        golden = json.load(f)[variant]
+    server = _build(tiny, _VARIANTS[variant])
+    for _ in range(len(golden["history"])):
+        server.round()
+    _assert_matches_golden(server.history, golden["history"],
+                           groups=server.selector.last_groups)
+    assert _params_digest(server.global_params) == pytest.approx(
+        float(golden["params_digest"]), rel=1e-7)
+
+
+@pytest.mark.parametrize("speculate", [False, True],
+                         ids=["spec-off", "spec-on"])
+@pytest.mark.parametrize("variant", sorted(_VARIANTS))
+def test_pipelined_matches_golden(tiny, variant, speculate):
+    """ISSUE acceptance: PipelinedServer reproduces the fedcat goldens
+    bit-for-bit with speculation on AND off — the group (not the device)
+    is the dispatch unit, and speculative group assignment on the selector
+    copy must replay identically."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)[variant]
+    server = _build(tiny, _VARIANTS[variant], engine="pipelined",
+                    runtime=RuntimeConfig(speculate=speculate))
+    for _ in range(len(golden["history"])):
+        server.round()
+    _assert_matches_golden(server.history, golden["history"])
+    assert _params_digest(server.global_params) == pytest.approx(
+        float(golden["params_digest"]), rel=1e-7)
+    if speculate:
+        for rec in server.history:
+            assert isinstance(rec["spec_hit"], bool)
+
+
+def test_forced_shard_matches_golden(tiny):
+    """shard=True partitions whole groups over the ("clients",) mesh; the
+    chain outputs must still match the sequential golden."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)["fedcat_maxent"]
+    server = _build(tiny, "fedcat+maxent", engine="pipelined",
+                    runtime=RuntimeConfig(shard=True))
+    for _ in range(len(golden["history"])):
+        server.round()
+    _assert_matches_golden(server.history, golden["history"])
+    assert _params_digest(server.global_params) == pytest.approx(
+        float(golden["params_digest"]), rel=1e-6)
+
+
+# ------------------------------------------------- group-size-1 reduction
+
+def test_group_size_1_is_bitforbit_fedavg(tiny):
+    """ISSUE acceptance: with group size 1 every device is its own chain,
+    so the fedcat round history is bit-for-bit the plain fedavg history
+    recorded in the seed golden (same selector stream: catgroups wraps
+    uniform with the identical seed)."""
+    with open(GOLDEN_SEED) as f:
+        golden = json.load(f)["fedavg_uniform"]
+    server = _build(tiny, "fedcat", group_size=1)
+    for _ in range(len(golden["history"])):
+        server.round()
+    _assert_matches_golden(server.history, golden["history"])
+    assert _params_digest(server.global_params) == pytest.approx(
+        float(golden["params_digest"]), rel=1e-7)
+
+
+def test_group_size_1_equals_live_fedavg_params(tiny):
+    """Stronger than the digest: the K=1 chain program and the vmapped
+    fedavg program produce identical parameter arrays."""
+    data, params = tiny
+    fa = fl.build("fedavg", cnn.apply, params, data,
+                  fl.ServerConfig(num_clients=8, participation=0.5, seed=0),
+                  LocalSpec(epochs=1, batch_size=20))
+    k1 = _build(tiny, "fedcat", group_size=1)
+    for _ in range(3):
+        fa.round()
+        k1.round()
+    for a, b in zip(jax.tree.leaves(fa.global_params),
+                    jax.tree.leaves(k1.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -------------------------------------------- judgment filters the chain
+
+def test_rejection_truncates_chain_not_whole_group(tiny):
+    """A rejected device cuts its chain at the last stage it never touched:
+    the admitted prefix still aggregates (BudgetedJudge forces exactly two
+    rejections per round, so truncation happens every round)."""
+    server = _build(tiny, "fedcat", judge=fl.BudgetedJudge(budget=2))
+    before = _params_digest(server.global_params)
+    for _ in range(2):
+        rec = server.round()
+        assert len(rec["positive"]) == 2 and len(rec["negative"]) == 2
+    assert _params_digest(server.global_params) != pytest.approx(before)
+
+
+def test_all_rejected_keeps_global_params(tiny):
+    """If judgment empties every chain the global model must be kept, not
+    zeroed by an empty weighted average."""
+    _, params = tiny
+
+    @fl.register("judge", "reject-all")
+    class RejectAll:
+        def __call__(self, soft_labels, sizes):
+            return [], list(range(len(sizes))), float("nan")
+
+    server = _build(tiny, "fedcat", judge="reject-all")
+    server.round()
+    for a, b in zip(jax.tree.leaves(server.global_params),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------ misspeculation + groups
+
+class _WrongSpeculationJudge(fl.MaxEntropyJudge):
+    """Oracle = real maxent; traced form admits everyone, so every round
+    with a rejection misspeculates and its group dispatch is re-issued."""
+
+    def traced(self):
+        return fl.PassThroughJudge().traced()
+
+
+def test_misspeculation_redispatches_groups_and_stays_correct(tiny):
+    """A wrong speculative verdict discards the in-flight group dispatch;
+    history and params still match the sequential golden."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)["fedcat_maxent"]
+    server = _build(tiny, "fedcat+maxent", engine="pipelined",
+                    runtime=RuntimeConfig(speculate=True),
+                    judge=_WrongSpeculationJudge())
+    for _ in range(len(golden["history"])):
+        server.round()
+    _assert_matches_golden(server.history, golden["history"])
+    assert _params_digest(server.global_params) == pytest.approx(
+        float(golden["params_digest"]), rel=1e-7)
+    for prev, rec in zip(server.history, server.history[1:]):
+        assert rec["redispatched"] == (not prev["spec_hit"])
+        assert prev["spec_hit"] == (not prev["negative"])

@@ -1,0 +1,105 @@
+"""Property-based tests for FedCAT grouping and concatenation aggregation.
+
+Requires the ``hypothesis`` dev extra (``pip install -e .[dev]``); the
+module skips cleanly when it is absent."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import repro.fl as fl  # noqa: E402
+from repro.core.pools import (  # noqa: E402
+    greedy_entropy_groups, hist_entropy, label_histograms,
+)
+
+
+def _hists(n, c, seed, concentration=0.3):
+    r = np.random.default_rng(seed)
+    return r.dirichlet(np.full(c, concentration), size=n) * \
+        r.integers(20, 400, (n, 1)).astype(np.float64)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 6), st.integers(2, 8),
+       st.integers(0, 100_000))
+def test_property_groups_partition_exactly_once(n, c, k, seed):
+    """Every device appears in exactly one group, groups never exceed the
+    requested size, and only the last group may be smaller."""
+    groups = greedy_entropy_groups(_hists(n, c, seed), k)
+    flat = [i for g in groups for i in g]
+    assert sorted(flat) == list(range(n))
+    assert all(1 <= len(g) <= k for g in groups)
+    assert all(len(g) == k for g in groups[:-1])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 6), st.integers(2, 4),
+       st.integers(0, 100_000))
+def test_property_grouping_deterministic_in_seed(n, c, k, seed):
+    """Two CatGroupers with the same seed and the same bound corpus draw
+    the same selections AND the same ordered groups, round after round —
+    the invariant that makes speculative group dispatch replayable."""
+    r = np.random.default_rng(seed)
+    y = r.integers(0, c, (n, 12))
+    w = (r.random((n, 12)) > 0.2).astype(np.float64)
+    config = fl.ServerConfig(num_clients=n, participation=0.5, seed=seed,
+                             group_size=k)
+    a = fl.CatGrouper.from_config(config, None)
+    b = fl.CatGrouper.from_config(config, None)
+    a.bind_data({"y": y, "w": w})
+    b.bind_data({"y": y, "w": w})
+    for _ in range(3):
+        sa, sb = a.select(max(2, n // 2)), b.select(max(2, n // 2))
+        assert sa == sb
+        assert a.last_groups == b.last_groups
+        flat = sorted(i for g in a.last_groups for i in g)
+        assert flat == list(range(len(sa)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 10), st.integers(2, 5), st.integers(0, 100_000))
+def test_property_group_size_1_reduces_to_weighted_average(n, d, seed):
+    """DeviceConcatAggregator over singleton chains IS the plain
+    size-weighted average — same arrays, bit for bit."""
+    r = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(r.normal(size=(n, d)), jnp.float32),
+              "b": jnp.asarray(r.normal(size=(n,)), jnp.float32)}
+    sizes = jnp.asarray(r.integers(1, 100, n), jnp.float32)
+    mask = jnp.asarray(r.integers(0, 2, n), jnp.float32)
+    gp = {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
+    out = {"params": params,
+           "group_id": jnp.arange(n, dtype=jnp.int32),
+           "chain_pos": jnp.zeros(n, jnp.int32)}
+    cat = fl.DeviceConcatAggregator()(gp, out, sizes, mask)
+    avg = fl.WeightedAverageAggregator()(gp, dict(params=params), sizes,
+                                         mask)
+    if float(jnp.sum(sizes * mask)) > 0:
+        for a, b in zip(jax.tree.leaves(cat),
+                        jax.tree.leaves(avg)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    else:   # all rejected: fedcat keeps the global model, fedavg zeroes it
+        for a, b in zip(jax.tree.leaves(cat),
+                        jax.tree.leaves(gp)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 8), st.integers(0, 100_000))
+def test_property_greedy_groups_entropy_at_least_singletons(n, c, seed):
+    """The greedy pooled-histogram entropy of every full group is at least
+    the entropy of its own most-skewed member (adding devices with other
+    labels cannot lower the pooled entropy below the seed's)."""
+    hists = _hists(n, c, seed)
+    for g in greedy_entropy_groups(hists, 3):
+        pooled = hist_entropy(np.sum(hists[g], axis=0))
+        assert pooled >= min(hist_entropy(hists[i]) for i in g) - 1e-9
+
+
+def test_label_histograms_respects_weights():
+    y = np.array([[0, 1, 1], [2, 2, 0]])
+    w = np.array([[1.0, 0.0, 1.0], [1.0, 1.0, 0.0]])
+    h = label_histograms(y, w, num_classes=3)
+    np.testing.assert_array_equal(h, [[1, 1, 0], [0, 0, 2]])
