@@ -1,0 +1,189 @@
+"""Data-plane A/B: host-slice (seed-era) vs device-resident ClientCorpus.
+
+Paper-scale smoke (ROADMAP item): N=100 clients, pipelined engine, the
+synthetic CIFAR-like corpus at reduced resolution. Two servers run the
+same composition:
+
+* ``host-slice`` — the seed-era data plane, re-created for the A/B: the
+  stacked corpus lives in host numpy and every round slices the cohort
+  on host and ships it to device (bytes/round = the full cohort).
+* ``corpus`` — the ``ClientCorpus`` data plane: the corpus is device-
+  resident (storage dtype), the cohort is a jitted on-device gather,
+  and only the ``idx`` vector crosses the host→device boundary.
+
+The JSON blob (``BENCH_dataplane.json``) records per-round host→device
+bytes for both paths, measured round wall-clock, and the resident-memory
+ratio of uint8 vs float32 storage for the same image corpus — the two
+levers the corpus refactor pulls.
+
+  PYTHONPATH=src python -m benchmarks.dataplane_bench --smoke \
+      --out BENCH_dataplane.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.data.corpus import ClientCorpus, Normalize
+from repro.data.partition import partition
+from repro.data.synthetic import make_image_dataset
+from repro.fl.runtime import PipelinedServer, RuntimeConfig
+from repro.models import cnn
+
+
+class HostSliceServer(PipelinedServer):
+    """Seed-era data plane, preserved for the A/B baseline: numpy-resident
+    corpus, per-round host slice + full-cohort H2D transfer."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        host = self.corpus.as_numpy()
+        if self.corpus.transform is not None:
+            # the seed-era layout stored images post-normalization, float32
+            host["x"] = np.asarray(self.corpus.transform(
+                jnp.asarray(host["x"])))
+        self._host = host
+        self.h2d_bytes_per_round = 0
+
+    def _run_cohort(self, sel, selector, global_params=None):
+        gp = self.global_params if global_params is None else global_params
+        idx = np.asarray(sel)
+        data = {k: v[idx] for k, v in self._host.items()}
+        self.h2d_bytes_per_round = sum(v.nbytes for v in data.values())
+        prev_p, c_loc, c_glob = self.strategy.client_inputs(self.state, idx)
+        return self._client_fn()(gp, data, prev_p, c_loc, c_glob)
+
+
+def _make_corpus(num_clients: int, samples_multiple: int, seed: int = 0):
+    classes, hw = 10, 16
+    per_class = max(2 * num_clients, 40)
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=classes, train_per_class=per_class, test_per_class=10,
+        hw=hw, noise=0.9, seed=seed)
+    parts = partition("case1", ytr, num_clients, classes, seed=seed)
+    corpus = ClientCorpus.from_parts(xtr, ytr, parts,
+                                     batch_multiple=samples_multiple)
+    params = cnn.init(jax.random.PRNGKey(seed), image_hw=hw,
+                      num_classes=classes)
+    return corpus, params, (xtr, ytr, parts)
+
+
+def _prove_resident_gather(corpus, m: int) -> None:
+    """Regression tripwire for the corpus path: with ``idx`` already on
+    device, a cohort gather must move zero bytes across the host
+    boundary — any reintroduced numpy fallback or host round-trip in the
+    gather path raises under the transfer guard and fails the bench."""
+    idx = jax.device_put(jnp.arange(m, dtype=jnp.int32))
+    corpus.cohort(idx)                      # compile outside the guard
+    with jax.transfer_guard("disallow"):
+        jax.block_until_ready(corpus.cohort(idx)["x"])
+
+
+def _time_rounds(server, rounds: int) -> float:
+    server.round()                            # warmup: compile + dispatch
+    jax.block_until_ready(server.global_params)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        server.round()
+    jax.block_until_ready(server.global_params)
+    return (time.perf_counter() - t0) / rounds
+
+
+def run(fast: bool = False, smoke: bool = False, num_clients: int = 100,
+        rounds: int = 3):
+    """Benchmark-harness entry: returns (csv_rows, json_blob)."""
+    if smoke:
+        num_clients, rounds = 100, 3        # paper-scale N, pinned for CI
+    elif fast:
+        num_clients, rounds = 32, 3
+    local = LocalSpec(epochs=1, batch_size=20)
+    corpus, params, (xtr, ytr, parts) = _make_corpus(num_clients, 20)
+    cfg = fl.ServerConfig(num_clients=num_clients, participation=0.1, seed=0)
+    m = max(1, int(round(num_clients * cfg.participation)))
+
+    results = {}
+    for name in ("host-slice", "corpus"):
+        engine = HostSliceServer if name == "host-slice" else "pipelined"
+        server = fl.build("fedentropy", cnn.apply, params, corpus, cfg,
+                          local, engine=engine, runtime=RuntimeConfig())
+        if name == "corpus":
+            assert all(isinstance(v, jax.Array)
+                       for v in server.corpus.values())
+            _prove_resident_gather(server.corpus, m)
+        s_per_round = _time_rounds(server, rounds)
+        if name == "host-slice":
+            bytes_round = server.h2d_bytes_per_round
+            basis = "measured: cohort arrays shipped per round"
+        else:
+            # computed, not measured: the idx vector (int32) is the only
+            # per-round H2D payload — _prove_resident_gather above raises
+            # if the gather itself ever touches the host again
+            bytes_round = m * np.dtype(np.int32).itemsize
+            basis = ("computed: idx vector only (corpus device-resident; "
+                     "gather verified transfer-free under transfer_guard)")
+        results[name] = {"engine": name, "s_per_round": s_per_round,
+                         "h2d_bytes_per_round": int(bytes_round),
+                         "h2d_basis": basis, "rounds": rounds}
+
+    # resident-memory lever: the same images stored uint8 vs float32
+    lo, hi = xtr.min(), xtr.max()
+    x8 = np.clip((xtr - lo) / max(hi - lo, 1e-9) * 255, 0, 255
+                 ).astype(np.uint8)
+    c8 = ClientCorpus.from_parts(
+        x8, ytr, parts, batch_multiple=20,
+        transform=Normalize(scale=(hi - lo) / 255.0, mean=(-lo,)))
+    c8.cohort(np.arange(m))                    # prove the gather traces
+    mem = {"float32_bytes": corpus.nbytes, "uint8_bytes": c8.nbytes,
+           "ratio": corpus.nbytes / max(c8.nbytes, 1)}
+
+    base = results["host-slice"]
+    cor = results["corpus"]
+    reduction = base["h2d_bytes_per_round"] / max(
+        cor["h2d_bytes_per_round"], 1)
+    rows = [
+        ("dataplane_host_slice", f"{base['s_per_round'] * 1e6:.0f}",
+         f"{base['h2d_bytes_per_round']}B/round"),
+        ("dataplane_corpus", f"{cor['s_per_round'] * 1e6:.0f}",
+         f"{cor['h2d_bytes_per_round']}B/round"),
+        ("dataplane_h2d_reduction", "0", f"{reduction:.0f}x"),
+    ]
+    blob = {"results": list(results.values()),
+            "h2d_reduction": reduction, "resident_memory": mem,
+            "num_clients": num_clients, "cohort": m, "rounds": rounds,
+            "devices": len(jax.devices()),
+            "backend": jax.default_backend()}
+    return rows, blob
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: N=100 clients, 3 rounds (paper-scale N)")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--clients", type=int, default=100)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--out", default="",
+                    help="write the JSON blob here (BENCH_dataplane.json)")
+    args = ap.parse_args()
+    rows, blob = run(fast=args.fast, smoke=args.smoke,
+                     num_clients=args.clients, rounds=args.rounds)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)
+    print(f"h2d: {blob['h2d_reduction']:.0f}x fewer bytes/round; "
+          f"resident uint8 {blob['resident_memory']['ratio']:.1f}x smaller")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(blob, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ import os
 import sys
 
 from . import ablation_fig3, accuracy_table1, comm_table2, \
-    engine_throughput, microbench, roofline, synergy_table3
+    dataplane_bench, engine_throughput, microbench, roofline, synergy_table3
 
 TABLES = {
     "table1": accuracy_table1.run,
@@ -26,6 +26,7 @@ TABLES = {
     "micro": microbench.run,
     "roofline": roofline.run,
     "engine": engine_throughput.run,
+    "dataplane": dataplane_bench.run,
 }
 
 

@@ -6,33 +6,47 @@ epsilon-greedy pools + maximum-entropy judgment + weighted aggregation,
 ``build("fedavg", ...)`` the uniform/admit-all baseline. Prints the
 per-round positive/negative split and the accuracy trajectory.
 
-  PYTHONPATH=src python examples/quickstart.py
+Client data rides in a device-resident ``ClientCorpus`` (uint8 storage +
+on-device normalization when pointed at a real CIFAR-10 directory):
+
+  PYTHONPATH=src python examples/quickstart.py [path/to/cifar-10-batches-py]
 """
+import sys
+
 import jax
 import jax.numpy as jnp
 
 import repro.fl as fl
-from repro.data.partition import partition, stack_clients
-from repro.data.synthetic import make_image_dataset
+from repro.data import ClientCorpus, load_image_corpus
+from repro.data.partition import partition
 from repro.models import cnn
 
 NUM_CLIENTS, CLASSES, ROUNDS = 12, 4, 8
 
 
 def main():
-    (xtr, ytr), (xte, yte) = make_image_dataset(
-        num_classes=CLASSES, train_per_class=100, test_per_class=25,
-        hw=16, noise=0.6, seed=3)
-    parts = partition("case1", ytr, NUM_CLIENTS, CLASSES, seed=0)
-    data = stack_clients(xtr, ytr, parts, batch_multiple=25)
-    params = cnn.init(jax.random.PRNGKey(0), image_hw=16,
-                      num_classes=CLASSES)
-    test = (jnp.asarray(xte), jnp.asarray(yte))
+    src = load_image_corpus(sys.argv[1] if len(sys.argv) > 1 else None,
+                            num_classes=CLASSES, train_per_class=100,
+                            test_per_class=25, hw=16, noise=0.6, seed=3)
+    (xtr, ytr), (xte, yte) = src.train, src.test
+    parts = partition("case1", ytr, NUM_CLIENTS, src.num_classes, seed=0)
+    # storage dtype (uint8 for CIFAR-10) stays resident; normalization
+    # happens on device inside the per-round cohort gather
+    corpus = ClientCorpus.from_parts(xtr, ytr, parts, batch_multiple=25,
+                                     transform=src.transform)
+    print(f"corpus: {src.source}, {corpus.num_clients} clients, "
+          f"{corpus['x'].dtype} resident, {corpus.nbytes / 1e6:.1f} MB")
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=xtr.shape[1],
+                      num_classes=src.num_classes)
+    xte = jnp.asarray(xte)
+    if src.transform is not None:
+        xte = src.transform(xte)
+    test = (xte, jnp.asarray(yte))
 
     results = {}
     for name, method in [("FedEntropy", "fedentropy"), ("FedAvg", "fedavg")]:
         server = fl.build(
-            method, cnn.apply, params, data,
+            method, cnn.apply, params, corpus,
             fl.ServerConfig(num_clients=NUM_CLIENTS, participation=0.34,
                             seed=0),
             fl.LocalSpec(epochs=2, batch_size=25, lr=0.02))

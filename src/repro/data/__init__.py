@@ -1,1 +1,8 @@
-from . import partition, synthetic
+from . import corpus, ingest, partition, synthetic
+from .corpus import ClientCorpus, DataQueue, Normalize
+from .ingest import load_cifar10, load_image_corpus
+
+__all__ = [
+    "ClientCorpus", "DataQueue", "Normalize", "corpus", "ingest",
+    "load_cifar10", "load_image_corpus", "partition", "synthetic",
+]

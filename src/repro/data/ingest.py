@@ -1,0 +1,104 @@
+"""Real-image ingest: CIFAR-10 from a local directory, synthetic fallback.
+
+The container is offline, so nothing here downloads. Point
+:func:`load_cifar10` at a directory containing the standard python-pickle
+release (``cifar-10-batches-py/`` with ``data_batch_1..5`` +
+``test_batch``, from ``cifar-10-python.tar.gz`` extracted anywhere under
+``root``) and it returns **uint8** HWC images — the natural storage dtype
+for :class:`repro.data.corpus.ClientCorpus`, which normalizes on device
+at cohort-gather time via :func:`cifar10_normalizer`.
+
+:func:`load_image_corpus` is the single entry the launcher/benchmarks
+use: CIFAR-10 when a root is given (missing batches under it fail
+loudly), the synthetic class-template dataset when no root is given,
+plus the matching ``Normalize`` transform and a ``source`` tag so runs
+record what they trained on.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+from dataclasses import dataclass
+
+import numpy as np
+
+from .corpus import Normalize
+from .synthetic import make_image_dataset
+
+# per-channel statistics of the CIFAR-10 training set (the standard values)
+CIFAR10_MEAN = (0.4914, 0.4822, 0.4465)
+CIFAR10_STD = (0.2470, 0.2435, 0.2616)
+
+_TRAIN_BATCHES = tuple(f"data_batch_{i}" for i in range(1, 6))
+_TEST_BATCH = "test_batch"
+
+
+def cifar10_normalizer() -> Normalize:
+    """uint8 -> float32 on-device policy: /255 then per-channel (x-m)/s."""
+    return Normalize(scale=1.0 / 255.0, mean=CIFAR10_MEAN, std=CIFAR10_STD)
+
+
+def _find_batches_dir(root: str) -> str:
+    """Locate the directory holding the pickle batches under ``root``."""
+    candidates = [root, os.path.join(root, "cifar-10-batches-py")]
+    for cand in candidates:
+        if os.path.isfile(os.path.join(cand, _TRAIN_BATCHES[0])):
+            return cand
+    for dirpath, _, files in os.walk(root):
+        if _TRAIN_BATCHES[0] in files:
+            return dirpath
+    raise FileNotFoundError(
+        f"no CIFAR-10 python batches (data_batch_1..5) under {root!r}; "
+        "extract cifar-10-python.tar.gz there or pass its directory")
+
+
+def _read_batch(path: str) -> tuple[np.ndarray, np.ndarray]:
+    with open(path, "rb") as f:
+        blob = pickle.load(f, encoding="bytes")
+    x = np.asarray(blob[b"data"], np.uint8)          # (n, 3072) CHW-flat
+    y = np.asarray(blob[b"labels"], np.int32)
+    x = x.reshape(-1, 3, 32, 32).transpose(0, 2, 3, 1)   # -> (n, 32, 32, 3)
+    return np.ascontiguousarray(x), y
+
+
+def load_cifar10(root: str):
+    """((xtr, ytr), (xte, yte)) — x uint8 (n, 32, 32, 3), y int32."""
+    d = _find_batches_dir(root)
+    xs, ys = zip(*(_read_batch(os.path.join(d, b)) for b in _TRAIN_BATCHES))
+    xtr, ytr = np.concatenate(xs), np.concatenate(ys)
+    xte, yte = _read_batch(os.path.join(d, _TEST_BATCH))
+    return (xtr, ytr), (xte, yte)
+
+
+@dataclass(frozen=True)
+class ImageCorpusSource:
+    """What :func:`load_image_corpus` resolved to."""
+    train: tuple          # (x, y) — x in storage dtype (uint8 or float32)
+    test: tuple           # (x, y)
+    transform: Normalize | None
+    source: str           # "cifar10" | "synthetic"
+    num_classes: int
+
+
+def load_image_corpus(root: str | None = None, *, num_classes: int = 10,
+                      train_per_class: int = 500, test_per_class: int = 100,
+                      hw: int = 16, noise: float = 0.9,
+                      seed: int = 0) -> ImageCorpusSource:
+    """CIFAR-10 from ``root``; synthetic when no ``root`` is given.
+
+    A non-empty ``root`` MUST hold the pickle batches — a missing or
+    not-yet-populated directory raises ``FileNotFoundError`` rather than
+    silently training on synthetic data. The synthetic keyword set
+    mirrors ``make_image_dataset`` (reduced scale by default); CIFAR-10
+    ignores those knobs and returns the full 50k/10k uint8 set with the
+    on-device normalizer attached.
+    """
+    if root:
+        (xtr, ytr), (xte, yte) = load_cifar10(root)
+        return ImageCorpusSource((xtr, ytr), (xte, yte),
+                                 cifar10_normalizer(), "cifar10", 10)
+    (xtr, ytr), (xte, yte) = make_image_dataset(
+        num_classes=num_classes, train_per_class=train_per_class,
+        test_per_class=test_per_class, hw=hw, noise=noise, seed=seed)
+    return ImageCorpusSource((xtr, ytr), (xte, yte), None, "synthetic",
+                             num_classes)

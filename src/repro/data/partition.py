@@ -64,10 +64,15 @@ def partition_case2(y, num_clients, num_classes, seed=0):
 
 
 def partition_dirichlet(y, num_clients, num_classes, beta=0.1, seed=0,
-                        min_samples=2):
-    """Dirichlet(beta) label proportions per client (paper case 3)."""
+                        min_samples=2, max_retries=1000):
+    """Dirichlet(beta) label proportions per client (paper case 3).
+
+    Draws are resampled until every client holds at least ``min_samples``;
+    an infeasible (beta, min_samples, N) combination fails loudly after
+    ``max_retries`` attempts instead of hanging the run.
+    """
     rng = np.random.default_rng(seed)
-    while True:
+    for _ in range(max(1, int(max_retries))):
         pools = _by_class(y, num_classes, rng)
         parts = [[] for _ in range(num_clients)]
         for c in range(num_classes):
@@ -78,6 +83,11 @@ def partition_dirichlet(y, num_clients, num_classes, beta=0.1, seed=0,
         parts = [np.concatenate(p) for p in parts]
         if min(len(p) for p in parts) >= min_samples:
             return [rng.permutation(p) for p in parts]
+    raise RuntimeError(
+        f"partition_dirichlet: no draw gave every one of {num_clients} "
+        f"clients >= {min_samples} samples after {max_retries} resamples "
+        f"(beta={beta}, {len(y)} samples); lower min_samples, raise beta, "
+        "or reduce num_clients")
 
 
 def partition(case: str, y, num_clients, num_classes, seed=0, beta=0.1):

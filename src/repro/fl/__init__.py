@@ -8,7 +8,8 @@ axis           question it answers                   built-ins
 =============  ====================================  ======================
 ``Selector``   who is asked to train this round      ``pools``, ``uniform``,
                                                      ``catgroups``,
-                                                     ``catgroups-pools``
+                                                     ``catgroups-pools``,
+                                                     ``queue``
 ``ClientStrategy``  how each client trains locally   ``fedavg``,
                                                      ``fedprox``,
                                                      ``scaffold``, ``moon``,
@@ -60,6 +61,7 @@ old (``FedEntropyTrainer`` + ``FLConfig``)             new (``repro.fl``)
 =====================================================  ====================
 """
 from ..core.strategies import LocalSpec
+from ..data.corpus import ClientCorpus, DataQueue, Normalize
 from .aggregators import (
     DeviceConcatAggregator, ScaffoldAggregator, WeightedAverageAggregator,
 )
@@ -67,7 +69,7 @@ from .judges import BudgetedJudge, MaxEntropyJudge, PassThroughJudge
 from .protocols import Aggregator, ClientStrategy, Judge, Selector
 from .registry import Composition, build, get, names, register
 from .selectors import (
-    CatGrouper, PoolCatGrouper, PoolSelector, UniformSelector,
+    CatGrouper, PoolCatGrouper, PoolSelector, QueueSelector, UniformSelector,
 )
 from .server import (
     BoundedJitCache, Server, ServerConfig, total_uplink_bytes,
@@ -81,11 +83,12 @@ from .runtime import PipelinedServer, RuntimeConfig
 
 __all__ = [
     "Aggregator", "BoundedJitCache", "BudgetedJudge", "CatChainStrategy",
-    "CatGrouper", "ClientStrategy", "Composition", "DeviceConcatAggregator",
-    "FedAvgStrategy", "FedProxStrategy", "Judge", "LocalSpec",
-    "MaxEntropyJudge", "MoonStrategy", "PassThroughJudge", "PipelinedServer",
-    "PoolCatGrouper", "PoolSelector", "RuntimeConfig", "ScaffoldAggregator",
-    "ScaffoldStrategy", "Selector", "Server", "ServerConfig",
-    "UniformSelector", "WeightedAverageAggregator", "build", "get", "names",
-    "register", "runtime", "total_uplink_bytes",
+    "CatGrouper", "ClientCorpus", "ClientStrategy", "Composition",
+    "DataQueue", "DeviceConcatAggregator", "FedAvgStrategy",
+    "FedProxStrategy", "Judge", "LocalSpec", "MaxEntropyJudge",
+    "MoonStrategy", "Normalize", "PassThroughJudge", "PipelinedServer",
+    "PoolCatGrouper", "PoolSelector", "QueueSelector", "RuntimeConfig",
+    "ScaffoldAggregator", "ScaffoldStrategy", "Selector", "Server",
+    "ServerConfig", "UniformSelector", "WeightedAverageAggregator", "build",
+    "get", "names", "register", "runtime", "total_uplink_bytes",
 ]

@@ -145,3 +145,8 @@ register("composition", "fedcat",
 register("composition", "fedcat+maxent",
          Composition(strategy="catchain", selector="catgroups-pools",
                      judge="maxent", aggregator="devconcat"))
+# Dynamic-data-queue participant selection (arXiv 2410.17792): clients
+# ranked by label entropy off the corpus stats, each round releasing a
+# growing prefix of the local dataset; judgment stays the paper's maxent.
+register("composition", "fedentropy+queue",
+         Composition(strategy="fedavg", selector="queue", judge="maxent"))

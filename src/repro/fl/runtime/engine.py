@@ -6,10 +6,14 @@ composition of :class:`repro.fl.Server` with two independent levers:
 **Sharding** (``RuntimeConfig.shard``): the stacked client axis of the
 vmapped ClientUpdate is partitioned over a 1-D ``("clients",)`` device
 mesh with ``shard_map`` (see :mod:`.sharding`), so |S_t| clients train on
-``len(devices)`` chips instead of one. ``"auto"`` (default) shards only
-when more than one device exists — on a single host device the engine
-compiles the identical program a sequential ``Server`` would, which is
-what makes the golden-history equivalence bit-for-bit.
+``len(devices)`` chips instead of one. The ``ClientCorpus`` is laid out
+over the same mesh exactly once (``corpus.shard``), so both the initial
+dispatch and the speculative re-dispatch path gather their cohorts on
+device from the resident corpus — the per-dispatch host slice + H2D
+copy is gone. ``"auto"`` (default) shards only when more than one device
+exists — on a single host device the engine compiles the identical
+program a sequential ``Server`` would, which is what makes the
+golden-history equivalence bit-for-bit.
 
 **Speculation** (``RuntimeConfig.speculate``): paper Alg. 2 serializes
 device compute behind the host-side float64 judgment oracle. The engine
@@ -105,6 +109,11 @@ class PipelinedServer(Server):
         if not self._shard_enabled():
             return super()._client_fn()
         mesh = self.client_mesh()
+        # the corpus is laid out over the client mesh exactly once
+        # (idempotent): cohort gathers then run as SPMD programs over the
+        # sharded operand and land distributed for the shard_map fan-out —
+        # no per-dispatch host→device copy, no per-round resharding
+        self.corpus.shard(mesh)
         key = ("sharded",) + self._client_key() + (
             mesh.shape[CLIENT_AXIS], self.runtime.donate_data)
         make = getattr(self.strategy, "make_client_fn", None)

@@ -12,6 +12,10 @@ see exactly |S_t| clients.
 ``make_client_mesh`` builds the 1-D mesh over whatever devices exist —
 on a TPU slice that is the whole pod; reuse ``launch.mesh`` for 2-D
 production meshes and pass ``mesh_axis_size`` devices explicitly.
+
+The axis name is shared with :mod:`repro.data.corpus`: a ``ClientCorpus``
+sharded over the same ``("clients",)`` mesh feeds its on-device cohort
+gathers straight into this fan-out with no resharding.
 """
 from __future__ import annotations
 
@@ -22,9 +26,13 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ...core.strategies import ApplyFn
+from ...data.corpus import CLIENT_AXIS
 from ..server import _make_client_fn
 
-CLIENT_AXIS = "clients"
+__all__ = [
+    "CLIENT_AXIS", "client_mesh_from", "make_client_mesh",
+    "make_sharded_client_fn", "pad_to_multiple",
+]
 
 
 def make_client_mesh(devices=None) -> Mesh:

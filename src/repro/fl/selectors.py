@@ -13,6 +13,18 @@
                       groups via ``core.pools.greedy_entropy_groups``;
                       ``catgroups`` wraps ``uniform`` (plain fedcat),
                       ``catgroups-pools`` wraps ``pools`` (fedcat+maxent).
+``QueueSelector``   — entropy-driven participant selection with dynamic
+                      data queues (arXiv 2410.17792): clients are ranked
+                      by label-distribution entropy off the bound corpus
+                      stats, eps-greedy explored, and each round releases
+                      a growing prefix of every selected client's local
+                      dataset via a ``DataQueue`` schedule that the server
+                      applies inside the cohort gather.
+
+Selectors that consume corpus statistics implement ``bind_data`` — the
+server passes its :class:`repro.data.corpus.ClientCorpus`, whose cached
+``label_histograms()``/``sizes()`` replace the per-selector recompute
+(a raw stacked dict still binds, for direct construction in tests).
 """
 from __future__ import annotations
 
@@ -20,8 +32,20 @@ from typing import Sequence
 
 import numpy as np
 
-from ..core.pools import DevicePools, greedy_entropy_groups, label_histograms
+from ..core.pools import (
+    DevicePools, greedy_entropy_groups, hist_entropy, label_histograms,
+)
+from ..data.corpus import ClientCorpus, DataQueue
 from .registry import register
+
+
+def _corpus_histograms(client_data) -> np.ndarray:
+    """Label histograms from a ClientCorpus (cached) or a stacked dict."""
+    if isinstance(client_data, ClientCorpus):
+        return client_data.label_histograms()
+    return label_histograms(np.asarray(client_data["y"]),
+                            np.asarray(client_data["w"])
+                            if "w" in client_data else None)
 
 
 @register("selector", "pools")
@@ -107,10 +131,10 @@ class CatGrouper:
         return cls(cls.inner_cls.from_config(config, local),
                    config.group_size)
 
-    def bind_data(self, client_data: dict) -> None:
-        """Record per-device label histograms from the stacked corpus."""
-        self._hists = label_histograms(np.asarray(client_data["y"]),
-                                       np.asarray(client_data["w"]))
+    def bind_data(self, client_data) -> None:
+        """Record per-device label histograms (corpus-cached when bound
+        to a ClientCorpus, recomputed for a raw stacked dict)."""
+        self._hists = _corpus_histograms(client_data)
 
     def select(self, num: int) -> list[int]:
         sel = self.inner.select(num)
@@ -141,3 +165,92 @@ class PoolCatGrouper(CatGrouper):
     re-files chain members, the synergy half of ``fedcat+maxent``."""
 
     inner_cls = PoolSelector
+
+
+@register("selector", "queue")
+class QueueSelector:
+    """Entropy-driven participation with dynamic data queues
+    (arXiv 2410.17792, heterogeneity cases per arXiv 2201.12515).
+
+    Ranking: with probability ``eps`` the round exploits — the ``num``
+    clients with the highest label-distribution entropy (read once off the
+    bound corpus's cached histograms), fairness-damped by a per-selection
+    ``fairness`` penalty so high-entropy clients don't monopolize rounds;
+    otherwise it explores uniformly. Ties break to the lowest client id,
+    so selection is a pure function of (rng stream, visit counts) and a
+    speculative deepcopy replays it exactly.
+
+    Queueing: every ``select`` advances a :class:`DataQueue` schedule and
+    records each chosen client's released sample count;
+    :meth:`data_schedule` hands those counts to the server, which masks
+    them into the cohort's weight row inside the jitted corpus gather —
+    the effective local dataset grows over training at zero transfer cost.
+
+    Unbound (no corpus stats), selection degrades to uniform and the
+    queue stays off — the selector never fabricates entropy ranks.
+    """
+
+    def __init__(self, num_clients: int, eps: float = 0.8, seed: int = 0,
+                 queue: DataQueue | None = None, fairness: float = 0.05):
+        self.num_clients = num_clients
+        self.eps = eps
+        self.fairness = fairness
+        self.queue = queue or DataQueue()
+        self._rng = np.random.default_rng(seed)
+        self._uses = np.zeros(num_clients, np.int64)
+        self._entropy: np.ndarray | None = None
+        self._sizes: np.ndarray | None = None
+        self._last_active: np.ndarray | None = None
+        self.round_idx = 0
+        self._pos = 0
+        self._neg = 0
+
+    @classmethod
+    def from_config(cls, config, local):
+        return cls(config.num_clients, config.eps, config.seed)
+
+    def bind_data(self, client_data) -> None:
+        """Pull per-client entropy ranks + real sizes off the corpus."""
+        if isinstance(client_data, ClientCorpus):
+            self._entropy = client_data.label_entropy()
+            self._sizes = client_data.sizes()
+        else:
+            hists = _corpus_histograms(client_data)
+            self._entropy = np.asarray(
+                [hist_entropy(h) for h in hists], np.float64)
+            w = np.asarray(client_data["w"]) if "w" in client_data else None
+            self._sizes = (np.full(len(hists), np.asarray(
+                client_data["y"]).shape[1], np.int64) if w is None
+                else w.sum(axis=1).astype(np.int64))
+
+    def select(self, num: int) -> list[int]:
+        num = min(num, self.num_clients)
+        if self._entropy is not None and self._rng.random() < self.eps:
+            score = self._entropy - self.fairness * self._uses
+            order = np.lexsort((np.arange(self.num_clients), -score))
+            sel = order[:num]
+        else:
+            sel = self._rng.choice(self.num_clients, num, replace=False)
+        sel = [int(i) for i in sel]
+        self._uses[sel] += 1
+        self._last_active = (None if self._sizes is None else
+                             self.queue.active(self.round_idx,
+                                               self._sizes[sel]))
+        self.round_idx += 1
+        return sel
+
+    def data_schedule(self, sel) -> np.ndarray | None:
+        """Released-sample counts for the selection :meth:`select` just
+        produced (the contract ``Server._run_cohort`` consumes); None
+        until a corpus is bound."""
+        return self._last_active
+
+    def update(self, positives: Sequence[int],
+               negatives: Sequence[int]) -> None:
+        self._pos += len(positives)
+        self._neg += len(negatives)
+
+    def stats(self) -> dict:
+        return {"selector": "queue", "round": self.round_idx,
+                "queue_frac": self.queue.frac(max(self.round_idx - 1, 0)),
+                "positive_total": self._pos, "negative_total": self._neg}

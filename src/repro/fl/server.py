@@ -7,6 +7,17 @@ judgment, pool bookkeeping) is host-side numpy — exactly the split the
 legacy ``FedEntropyTrainer`` used, so fixed-seed round histories are
 bit-for-bit reproducible.
 
+Client data lives in a device-resident
+:class:`repro.data.corpus.ClientCorpus` (a plain stacked dict is wrapped
+on construction): the per-round cohort is a jitted on-device gather
+(``corpus.cohort(idx)``) rather than a host slice + full-cohort
+host→device copy, the corpus keeps its storage dtype (uint8 ingest
+normalizes inside the traced gather), and selectors draw their
+control-plane stats (label histograms, sizes) off the corpus instead of
+recomputing them. Selectors exposing ``data_schedule(sel)`` (the
+dynamic-data-queue selector) have their per-client release counts
+applied as a weight mask inside the same gather.
+
 Compiled programs live in a per-server bounded LRU cache
 (``ServerConfig.jit_cache_size``), not a module-global dict: a benchmark
 sweep that builds hundreds of servers no longer accumulates params-sized
@@ -24,6 +35,7 @@ import numpy as np
 
 from ..core.aggregation import comm_bytes
 from ..core.strategies import ApplyFn, client_update, cross_entropy
+from ..data.corpus import ClientCorpus
 from .protocols import Aggregator, ClientStrategy, Judge, Selector
 
 
@@ -94,7 +106,11 @@ class Server:
     ):
         self.apply_fn = apply_fn
         self.global_params = init_params
-        self.data = client_data
+        # the data plane: device-resident, storage-dtype, gather-on-device
+        # (a plain stacked dict is wrapped; ClientCorpus is a Mapping, so
+        # `self.data` keeps its seed-era dict-like surface)
+        self.corpus = ClientCorpus.from_stacked(client_data)
+        self.data = self.corpus
         self.config = config
         self.selector = selector
         self.strategy = strategy
@@ -104,11 +120,12 @@ class Server:
         self.round_idx = 0
         self.history: list[dict] = []
         self._jit_cache = BoundedJitCache(config.jit_cache_size)
-        # selectors that stat the corpus (e.g. CatGrouper's label
-        # histograms) bind it once here — control-plane, host-side
+        # selectors that stat the corpus (CatGrouper's label histograms,
+        # the queue selector's entropy ranking) bind it once here — the
+        # corpus owns the cached control-plane stats
         bind = getattr(selector, "bind_data", None)
         if bind is not None:
-            bind(client_data)
+            bind(self.corpus)
 
     # ------------------------------------------------------------------
     def _compile_cache(self):
@@ -129,9 +146,7 @@ class Server:
         tag = ("client" if getattr(self.strategy, "make_client_fn", None)
                is None else f"client-{type(self.strategy).__name__}")
         return (tag, self.apply_fn, self.strategy.spec,
-                self.strategy.client_in_axes(),
-                tuple((k, v.shape, str(v.dtype))
-                      for k, v in sorted(self.data.items())))
+                self.strategy.client_in_axes(), self.corpus.signature())
 
     def _client_fn(self):
         make = getattr(self.strategy, "make_client_fn", None)
@@ -150,17 +165,22 @@ class Server:
 
     # ------------------------------------------------------------------
     def _run_cohort(self, sel, selector, global_params=None):
-        """Slice, lay out, and launch the cohort's client compute (async).
+        """Gather, lay out, and launch the cohort's client compute (async).
 
-        Group-aware strategies (``prepare_round``) re-lay the sliced
-        cohort into chain groups read off ``selector`` — the selector that
-        produced ``sel``, which under speculation may be a throwaway copy:
-        the group, not the device, is the dispatch unit, and its structure
-        is captured at dispatch time.
+        The cohort is a jitted on-device gather along the corpus's client
+        axis — only ``idx`` (and a data-queue schedule, if the selector
+        has one) cross the host→device boundary. Group-aware strategies
+        (``prepare_round``) re-lay the gathered cohort into chain groups
+        read off ``selector`` — the selector that produced ``sel``, which
+        under speculation may be a throwaway copy: the group, not the
+        device, is the dispatch unit, and its structure is captured at
+        dispatch time.
         """
         gp = self.global_params if global_params is None else global_params
         idx = np.asarray(sel)
-        data = {k: v[idx] for k, v in self.data.items()}
+        sched = getattr(selector, "data_schedule", None)
+        active = None if sched is None else sched(sel)
+        data = self.corpus.cohort(idx, active=active)
         prev_p, c_loc, c_glob = self.strategy.client_inputs(self.state, idx)
         prep = getattr(self.strategy, "prepare_round", None)
         if prep is None:
@@ -209,13 +229,21 @@ class Server:
     def evaluate(self, x: jax.Array, y: jax.Array,
                  batch: int = 512) -> dict:
         n = x.shape[0]
+        batch = min(batch, n)
         correct, loss_sum = 0.0, 0.0
         f = self._eval_fn()
         for i in range(0, n, batch):
             bx, by = x[i:i + batch], y[i:i + batch]
-            logits = f(self.global_params, bx)
+            m = bx.shape[0]
+            if m < batch:
+                # edge-pad the tail batch to the full shape so every batch
+                # runs the one compiled program (no n % batch variants);
+                # padded rows are sliced off the logits before scoring
+                reps = jnp.broadcast_to(bx[-1:], (batch - m,) + bx.shape[1:])
+                bx = jnp.concatenate([bx, reps], axis=0)
+            logits = f(self.global_params, bx)[:m]
             correct += float(jnp.sum(jnp.argmax(logits, -1) == by))
-            loss_sum += float(cross_entropy(logits, by)) * bx.shape[0]
+            loss_sum += float(cross_entropy(logits, by)) * m
         return {"accuracy": correct / n, "loss": loss_sum / n}
 
     def fit(self, rounds: int, eval_every: int = 0, eval_data=None) -> list:

@@ -127,9 +127,14 @@ class CatChainStrategy(_StatelessStrategy):
     def from_config(cls, config, local):
         return cls(local, config.group_size)
 
-    # ---- group layout (control plane, host-side numpy) ------------------
+    # ---- group layout (control-plane indices, data stays on device) -----
     def prepare_round(self, data: dict, selector) -> tuple[dict, dict]:
-        """Lay the sliced cohort out as (G, K, S, ...) chain groups."""
+        """Lay the gathered cohort out as (G, K, S, ...) chain groups.
+
+        ``data`` is the corpus's on-device cohort view; only the
+        permutation/validity *indices* are computed host-side — the
+        ragged-group relayout itself is a device gather/reshape.
+        """
         n = data["x"].shape[0]
         groups = getattr(selector, "last_groups", None)
         if not groups:

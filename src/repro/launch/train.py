@@ -260,10 +260,12 @@ def main() -> None:
     ap.add_argument("--no-fedentropy", action="store_true")
     ap.add_argument("--method", default="",
                     choices=["", "fedentropy", "fedavg", "fedcat",
-                             "fedcat+maxent"],
+                             "fedcat+maxent", "fedentropy+queue"],
                     help="named repro.fl composition (server engines); "
                          "fedcat chains grouped devices sequentially, "
-                         "fedcat+maxent filters chains with judgment")
+                         "fedcat+maxent filters chains with judgment, "
+                         "fedentropy+queue ranks clients by corpus "
+                         "entropy with a dynamic data queue")
     ap.add_argument("--group-size", type=int, default=2,
                     help="FedCAT chain length (fedcat compositions)")
     ap.add_argument("--engine", default="mesh",
@@ -271,8 +273,10 @@ def main() -> None:
                     help="mesh = gradient-level jitted step; sequential/"
                          "pipelined = weights-level repro.fl engines")
     ap.add_argument("--selector", default="pools",
-                    choices=["pools", "uniform"],
-                    help="repro.fl Selector driving client admission")
+                    choices=["pools", "uniform", "queue"],
+                    help="repro.fl Selector driving client admission "
+                         "(queue = entropy-ranked dynamic data queues, "
+                         "stats bound from the server's ClientCorpus)")
     ap.add_argument("--judge", default="maxent", choices=["maxent", "none"],
                     help="repro.fl Judge axis (both engines)")
     ap.add_argument("--judge-backend", default="xla",
@@ -301,6 +305,13 @@ def main() -> None:
     corpus, client_idx = build_fl_corpus(
         cfg, args.logical_clients, args.case, args.seq_len, args.seed)
     if args.engine == "mesh":
+        if args.selector == "queue":
+            # the mesh engine has no ClientCorpus to bind entropy stats or
+            # data-queue schedules to — it would silently run uniform
+            raise SystemExit(
+                "--selector queue needs a weights-level engine: use "
+                "--engine sequential or pipelined (the server binds the "
+                "corpus stats the queue selector ranks on)")
         if args.method:
             # the gradient-level step has no composition axis to honor a
             # named recipe (fedcat chains thread whole models); refusing

@@ -1,0 +1,357 @@
+"""The device-resident ``ClientCorpus`` data plane: paper-scale (N=100)
+partition exactness, bit-for-bit stack_clients round-trips and golden
+parity through the corpus-backed path, uint8 ingest + on-device
+normalization, dynamic data queues (schedule + selector + speculation
+transparency), the bounded dirichlet resampler, and tail-batch eval
+padding."""
+import json
+import os
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.data.corpus import ClientCorpus, DataQueue, Normalize
+from repro.data.ingest import (
+    cifar10_normalizer, load_cifar10, load_image_corpus,
+)
+from repro.data.partition import (
+    partition, partition_dirichlet, stack_clients,
+)
+from repro.data.synthetic import make_image_dataset
+from repro.fl.runtime import RuntimeConfig
+from repro.models import cnn
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "seed_history.json")
+
+PAPER_N, CLASSES = 100, 10
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """Identical to the setup the golden histories were recorded with."""
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=4, train_per_class=60, test_per_class=15, hw=16,
+        noise=0.4, seed=0)
+    parts = partition("case1", ytr, 8, 4, seed=0)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=20)
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=16, num_classes=4)
+    return data, params
+
+
+@pytest.fixture(scope="module")
+def paper_labels():
+    """A CIFAR-10-shaped label vector (paper N=100 scale, 500/class)."""
+    return np.random.default_rng(0).permutation(
+        np.repeat(np.arange(CLASSES, dtype=np.int32), 500))
+
+
+# ------------------------------------------------- paper-scale partitioning
+
+@pytest.mark.parametrize("case", ["case1", "case2", "dirichlet"])
+def test_paper_scale_partition_exactness(paper_labels, case):
+    """N=100: every sample assigned at most once; remainders accounted."""
+    y = paper_labels
+    parts = partition(case, y, PAPER_N, CLASSES, seed=0)
+    assert len(parts) == PAPER_N
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == len(allidx)          # at most once
+    assert allidx.min() >= 0 and allidx.max() < len(y)
+    for p in parts:
+        assert len(p) > 0
+    if case == "dirichlet":
+        # dirichlet splits the class pools exactly: nothing left over
+        assert len(allidx) == len(y)
+    else:
+        # per-class floor-division shares: remainder < users-per-class
+        leftovers = len(y) - len(allidx)
+        users = 2 * PAPER_N if case == "case2" else PAPER_N
+        assert 0 <= leftovers < users
+
+
+def test_dirichlet_infeasible_fails_loudly(paper_labels):
+    """A bad (beta, min_samples) combination raises instead of hanging."""
+    with pytest.raises(RuntimeError, match="min_samples|resamples"):
+        partition_dirichlet(paper_labels[:200], 100, CLASSES, beta=0.05,
+                            seed=0, min_samples=50, max_retries=3)
+
+
+def test_dirichlet_bounded_keeps_stream(paper_labels):
+    """The retry bound must not change feasible draws (same RNG stream)."""
+    a = partition_dirichlet(paper_labels, 20, CLASSES, seed=7)
+    b = partition_dirichlet(paper_labels, 20, CLASSES, seed=7,
+                            max_retries=5)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+
+
+# --------------------------------------------------- corpus round-tripping
+
+def test_corpus_roundtrips_stack_clients(paper_labels):
+    """ClientCorpus.from_parts == stack_clients bit-for-bit, N=100."""
+    y = paper_labels
+    x = np.random.default_rng(1).normal(
+        size=(len(y), 8, 8, 3)).astype(np.float32)
+    parts = partition("case1", y, PAPER_N, CLASSES, seed=0)
+    stacked = stack_clients(x, y, parts, batch_multiple=10)
+    corpus = ClientCorpus.from_parts(x, y, parts, batch_multiple=10)
+    host = corpus.as_numpy()
+    assert set(host) == set(stacked)
+    for k in stacked:
+        assert host[k].dtype == stacked[k].dtype
+        np.testing.assert_array_equal(host[k], stacked[k])
+    # cohort gather == host slice, bit-for-bit
+    idx = np.array([5, 93, 0, 41])
+    got = corpus.cohort(idx)
+    for k in stacked:
+        np.testing.assert_array_equal(np.asarray(got[k]), stacked[k][idx])
+    # an already-device idx is used as-is: the gather moves zero host
+    # bytes (the dataplane bench's regression tripwire, as a tier-1 test)
+    didx = jax.device_put(jnp.asarray(idx, jnp.int32))
+    corpus.cohort(didx)                       # compile outside the guard
+    with jax.transfer_guard("disallow"):
+        got2 = corpus.cohort(didx)
+    for k in stacked:
+        np.testing.assert_array_equal(np.asarray(got2[k]), stacked[k][idx])
+    # Mapping surface survives for seed-era call sites
+    assert corpus["y"].shape == (PAPER_N, stacked["y"].shape[1])
+    assert sorted(corpus) == sorted(stacked)
+    assert ClientCorpus.from_stacked(corpus) is corpus
+
+
+def test_corpus_control_plane_stats(paper_labels):
+    y = paper_labels[:1000]
+    x = np.zeros((len(y), 4, 4, 1), np.float32)
+    parts = partition("case1", y, 10, CLASSES, seed=0)
+    corpus = ClientCorpus.from_parts(x, y, parts)
+    from repro.core.pools import label_histograms
+    stacked = stack_clients(x, y, parts)
+    np.testing.assert_array_equal(
+        corpus.label_histograms(),
+        label_histograms(stacked["y"], stacked["w"]))
+    assert corpus.label_histograms() is corpus.label_histograms()  # cached
+    # the cache is keyed on num_classes: an explicit column count must
+    # not serve (or be poisoned by) the inferred-width entry
+    wide = corpus.label_histograms(num_classes=CLASSES + 3)
+    assert wide.shape[1] == CLASSES + 3
+    assert corpus.label_histograms().shape[1] == CLASSES
+    np.testing.assert_array_equal(corpus.sizes(),
+                                  stacked["w"].sum(axis=1).astype(np.int64))
+    # case1: single-label clients -> zero label entropy
+    np.testing.assert_allclose(corpus.label_entropy(), 0.0, atol=1e-12)
+
+
+def test_corpus_uint8_ingest_normalizes_on_device():
+    rng = np.random.default_rng(0)
+    xu = rng.integers(0, 256, size=(120, 8, 8, 3), dtype=np.uint8)
+    yu = rng.integers(0, 4, size=120).astype(np.int32)
+    parts = partition("case1", yu, 8, 4, seed=0)
+    norm = cifar10_normalizer()
+    c8 = ClientCorpus.from_parts(xu, yu, parts, batch_multiple=5,
+                                 transform=norm)
+    cf = ClientCorpus.from_parts(
+        np.asarray(norm(jnp.asarray(xu))), yu, parts, batch_multiple=5)
+    assert c8["x"].dtype == jnp.uint8                 # storage dtype kept
+    assert c8.nbytes * 3.5 < cf.nbytes                # ~4x smaller resident
+    idx = np.array([2, 7, 0])
+    a, b = c8.cohort(idx), cf.cohort(idx)
+    assert a["x"].dtype == jnp.float32                # normalized cohort
+    np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+    valid = np.asarray(a["w"]) > 0                    # pad rows differ by
+    np.testing.assert_allclose(                       # construction
+        np.asarray(a["x"])[valid], np.asarray(b["x"])[valid], atol=1e-6)
+    # host-slice baseline bytes: float32 x regardless of storage dtype
+    assert c8.cohort_nbytes(3) == cf.cohort_nbytes(3)
+
+
+def test_corpus_shard_single_device_mesh(tiny):
+    from repro.fl.runtime import make_client_mesh
+    data, _ = tiny
+    corpus = ClientCorpus.from_stacked(data)
+    mesh = make_client_mesh()
+    assert corpus.shard(mesh) is corpus
+    corpus.shard(mesh)                                # idempotent
+    got = corpus.cohort(np.array([1, 3]))
+    np.testing.assert_array_equal(np.asarray(got["y"]),
+                                  np.asarray(data["y"])[[1, 3]])
+
+
+# ------------------------------------------------------- dynamic data queue
+
+def test_data_queue_schedule_monotone():
+    q = DataQueue(start_frac=0.25, rounds_to_full=10)
+    sizes = np.array([100, 40, 7, 1])
+    prev = np.zeros_like(sizes)
+    for r in range(12):
+        act = q.active(r, sizes)
+        assert np.all(act >= prev) and np.all(act >= 1)
+        assert np.all(act <= sizes)
+        prev = act
+    np.testing.assert_array_equal(q.active(10, sizes), sizes)  # full set
+    np.testing.assert_array_equal(q.active(99, sizes), sizes)
+    staged = DataQueue(start_frac=0.25, rounds_to_full=8, growth="staged",
+                       stages=4)
+    fracs = {staged.frac(r) for r in range(9)}
+    assert len(fracs) == 5                       # start + 4 graduation steps
+    with pytest.raises(ValueError, match="linear.*staged"):
+        DataQueue(growth="Staged")
+
+
+def test_cohort_queue_mask(tiny):
+    data, _ = tiny
+    corpus = ClientCorpus.from_stacked(data)
+    idx = np.array([0, 4, 6])
+    active = np.array([3, 20, 0])
+    got = corpus.cohort(idx, active=active)
+    w = np.asarray(data["w"])[idx]
+    s = w.shape[1]
+    expect = w * (np.arange(s)[None, :] < active[:, None])
+    np.testing.assert_array_equal(np.asarray(got["w"]), expect)
+    # x/y untouched; no queue -> w untouched
+    np.testing.assert_array_equal(np.asarray(got["x"]),
+                                  np.asarray(data["x"])[idx])
+    plain = corpus.cohort(idx)
+    np.testing.assert_array_equal(np.asarray(plain["w"]), w)
+
+
+def test_queue_selector_ranks_and_schedules(tiny):
+    data, _ = tiny
+    corpus = ClientCorpus.from_stacked(data)
+    sel = fl.QueueSelector(8, eps=1.0, seed=0,
+                           queue=DataQueue(start_frac=0.5,
+                                           rounds_to_full=4))
+    sel.bind_data(corpus)
+    picks = sel.select(4)
+    # case1 clients all have zero label entropy: pure exploit ranks by
+    # (score, id) and the first round is the lowest ids
+    assert picks == [0, 1, 2, 3]
+    act = sel.data_schedule(picks)
+    assert act is not None and len(act) == 4
+    assert np.all(act <= corpus.sizes()[picks])
+    # fairness: exploiting twice must rotate to unvisited clients
+    second = sel.select(4)
+    assert set(second).isdisjoint(picks)
+    # unbound selector: uniform fallback, no schedule
+    blank = fl.QueueSelector(8, seed=0)
+    assert len(set(blank.select(4))) == 4
+    assert blank.data_schedule([0, 1, 2, 3]) is None
+    assert blank.stats()["selector"] == "queue"
+
+
+def test_queue_selector_speculation_transparent(tiny):
+    """fedentropy+queue: the pipelined speculative engine reproduces the
+    sequential server's history exactly (schedule rides the selector copy
+    the same way FedCAT groups do)."""
+    data, params = tiny
+    cfg = fl.ServerConfig(num_clients=8, participation=0.5, seed=0)
+    local = LocalSpec(epochs=1, batch_size=20)
+    seq = fl.build("fedentropy+queue", cnn.apply, params, data, cfg, local)
+    spec = fl.build("fedentropy+queue", cnn.apply, params, data, cfg, local,
+                    engine="pipelined", runtime=RuntimeConfig(speculate=True))
+    for _ in range(3):
+        seq.round()
+        spec.round()
+    for a, b in zip(seq.history, spec.history):
+        assert a["selected"] == b["selected"]
+        assert a["positive"] == b["positive"]
+        assert a["entropy"] == pytest.approx(b["entropy"], abs=1e-12)
+    # the queue actually withheld data early on: round-0 cohort trained on
+    # fewer effective samples than the full shard
+    act = seq.selector.queue.active(0, seq.corpus.sizes())
+    assert np.all(act < seq.corpus.sizes())
+
+
+# --------------------------------------------- golden via explicit corpus
+
+def test_golden_via_explicit_corpus(tiny):
+    """An explicitly constructed ClientCorpus (not a dict) feeds the same
+    bit-for-bit history the goldens recorded."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)["fedentropy"]
+    data, params = tiny
+    corpus = ClientCorpus.from_stacked(data)
+    server = fl.build("fedentropy", cnn.apply, params, corpus,
+                      fl.ServerConfig(num_clients=8, participation=0.5,
+                                      seed=0),
+                      LocalSpec(epochs=1, batch_size=20))
+    assert server.corpus is corpus
+    for _ in range(3):
+        server.round()
+    for g, w in zip(server.history, golden["history"][:3]):
+        assert g["selected"] == w["selected"]
+        assert g["positive"] == w["positive"]
+        assert g["negative"] == w["negative"]
+        assert g["entropy"] == pytest.approx(float(w["entropy"]), abs=1e-9)
+
+
+# ------------------------------------------------------- eval tail padding
+
+def test_evaluate_pads_tail_batch(tiny):
+    data, params = tiny
+    server = fl.build("fedavg", cnn.apply, params, data,
+                      fl.ServerConfig(num_clients=8, participation=0.5,
+                                      seed=0),
+                      LocalSpec(epochs=1, batch_size=20))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(70, 16, 16, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 4, size=70).astype(np.int32))
+    whole = server.evaluate(x, y, batch=70)
+    tail = server.evaluate(x, y, batch=32)        # 32 + 32 + 6
+    assert tail["accuracy"] == pytest.approx(whole["accuracy"], abs=1e-6)
+    assert tail["loss"] == pytest.approx(whole["loss"], rel=1e-5)
+    # one compiled program per batch shape, tail included
+    f = server._eval_fn()
+    cache_size = getattr(f, "_cache_size", None)
+    if cache_size is not None:
+        assert cache_size() == 2                  # (70,...) and (32,...)
+
+
+# ------------------------------------------------------------ CIFAR ingest
+
+def _write_fake_cifar(root):
+    d = os.path.join(root, "cifar-10-batches-py")
+    os.makedirs(d, exist_ok=True)
+    rng = np.random.default_rng(0)
+    for name, n in [(f"data_batch_{i}", 20) for i in range(1, 6)] + \
+            [("test_batch", 10)]:
+        blob = {b"data": rng.integers(0, 256, size=(n, 3072),
+                                      dtype=np.uint8),
+                b"labels": rng.integers(0, 10, size=n).tolist()}
+        with open(os.path.join(d, name), "wb") as f:
+            pickle.dump(blob, f)
+    return d
+
+
+def test_load_cifar10_pickle_batches(tmp_path):
+    d = _write_fake_cifar(str(tmp_path))
+    (xtr, ytr), (xte, yte) = load_cifar10(str(tmp_path))
+    assert xtr.shape == (100, 32, 32, 3) and xtr.dtype == np.uint8
+    assert ytr.shape == (100,) and ytr.dtype == np.int32
+    assert xte.shape == (10, 32, 32, 3)
+    # the batches dir itself also resolves
+    (x2, _), _ = load_cifar10(d)
+    np.testing.assert_array_equal(x2, xtr)
+    # CHW-flat -> HWC transpose: channel planes land in the last axis
+    with open(os.path.join(d, "data_batch_1"), "rb") as f:
+        raw = pickle.load(f, encoding="bytes")[b"data"]
+    np.testing.assert_array_equal(
+        xtr[0], raw[0].reshape(3, 32, 32).transpose(1, 2, 0))
+
+
+def test_load_image_corpus_sources(tmp_path):
+    src = load_image_corpus(None, num_classes=4, train_per_class=10,
+                            test_per_class=5)
+    assert src.source == "synthetic" and src.transform is None
+    assert src.train[0].dtype == np.float32
+    _write_fake_cifar(str(tmp_path))
+    real = load_image_corpus(str(tmp_path))
+    assert real.source == "cifar10" and real.num_classes == 10
+    assert real.train[0].dtype == np.uint8
+    assert isinstance(real.transform, Normalize)
+    with pytest.raises(FileNotFoundError, match="CIFAR-10"):
+        load_cifar10(str(tmp_path / "nowhere"))
