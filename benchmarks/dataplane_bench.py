@@ -11,6 +11,16 @@ same composition:
   resident (storage dtype), the cohort is a jitted on-device gather,
   and only the ``idx`` vector crosses the host→device boundary.
 
+A second A/B covers the *uneven-mesh placement* (N % devices != 0 — the
+paper's N=100 on any realistic accelerator count): the PR-4-era fallback
+replicated the whole corpus onto every mesh device, the padded-shard
+layout pads the client axis to the next mesh multiple and shards
+``P("clients")``. The blob records per-device resident bytes and round
+latency for both layouts; on a single device the comparison degenerates
+(both layouts coincide) — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (as the CI job
+does) to measure the real 8-way split.
+
 The JSON blob (``BENCH_dataplane.json``) records per-round host→device
 bytes for both paths, measured round wall-clock, and the resident-memory
 ratio of uint8 vs float32 storage for the same image corpus — the two
@@ -31,11 +41,28 @@ import numpy as np
 
 import repro.fl as fl
 from repro.core.strategies import LocalSpec
-from repro.data.corpus import ClientCorpus, Normalize
+from repro.data.corpus import CLIENT_AXIS, ClientCorpus, Normalize
 from repro.data.partition import partition
 from repro.data.synthetic import make_image_dataset
 from repro.fl.runtime import PipelinedServer, RuntimeConfig
 from repro.models import cnn
+
+
+class ReplicatedCorpus(ClientCorpus):
+    """The PR-4-era placement, preserved as the uneven-mesh A/B baseline:
+    ``N % mesh != 0`` silently fell back to replicating the whole corpus
+    onto every mesh device (every device held all N shards)."""
+
+    def shard(self, mesh, axis: str = CLIENT_AXIS) -> "ClientCorpus":
+        if self._mesh is mesh:
+            return self
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        size = mesh.shape[axis]
+        for k, v in self._arrays.items():
+            spec = P(axis) if v.shape[0] % size == 0 else P()
+            self._arrays[k] = jax.device_put(v, NamedSharding(mesh, spec))
+        self._mesh = mesh
+        return self
 
 
 class HostSliceServer(PipelinedServer):
@@ -77,13 +104,49 @@ def _make_corpus(num_clients: int, samples_multiple: int, seed: int = 0):
 
 def _prove_resident_gather(corpus, m: int) -> None:
     """Regression tripwire for the corpus path: with ``idx`` already on
-    device, a cohort gather must move zero bytes across the host
-    boundary — any reintroduced numpy fallback or host round-trip in the
-    gather path raises under the transfer guard and fails the bench."""
-    idx = jax.device_put(jnp.arange(m, dtype=jnp.int32))
+    device (replicated over the corpus mesh when sharded), a cohort
+    gather must move zero bytes across the host boundary — any
+    reintroduced numpy fallback or host round-trip in the gather path
+    raises under the transfer guard and fails the bench."""
+    idx = corpus.put_index(np.arange(m, dtype=np.int32))
     corpus.cohort(idx)                      # compile outside the guard
     with jax.transfer_guard("disallow"):
         jax.block_until_ready(corpus.cohort(idx)["x"])
+
+
+def _uneven_ab(xtr, ytr, parts, params, cfg, local, rounds: int) -> dict:
+    """Replicated (PR-4 fallback) vs padded-shard placement on the current
+    mesh: per-device resident corpus bytes and measured round latency.
+
+    With N % devices != 0 the replicated baseline holds the full corpus on
+    EVERY device; the padded layout holds ~ceil(N/devices) client rows per
+    device (13/100 of the replicated total at N=100 on 8 devices)."""
+    from jax.sharding import PartitionSpec as P
+    layouts = {}
+    for name, cls in (("replicated", ReplicatedCorpus),
+                      ("padded", ClientCorpus)):
+        corpus = cls.from_parts(xtr, ytr, parts, batch_multiple=20)
+        server = fl.build("fedentropy", cnn.apply, params, corpus, cfg,
+                          local, engine="pipelined",
+                          runtime=RuntimeConfig(shard=True))
+        s_per_round = _time_rounds(server, rounds)
+        layouts[name] = {
+            "layout": name, "s_per_round": s_per_round,
+            "device_nbytes": corpus.device_nbytes(),
+            "total_nbytes": corpus.nbytes,
+            "padded_clients": corpus.padded_num_clients,
+            "client_sharded": all(v.sharding.spec == P(CLIENT_AXIS)
+                                  for v in corpus.values()),
+        }
+    return {
+        "devices": len(jax.devices()),
+        "uneven": cfg.num_clients % len(jax.devices()) != 0,
+        "layouts": list(layouts.values()),
+        # the memory lever: fraction of the replicated per-device bytes
+        # the padded-shard layout keeps resident on the busiest device
+        "device_bytes_ratio": layouts["padded"]["device_nbytes"]
+        / max(layouts["replicated"]["device_nbytes"], 1),
+    }
 
 
 def _time_rounds(server, rounds: int) -> float:
@@ -105,6 +168,9 @@ def run(fast: bool = False, smoke: bool = False, num_clients: int = 100,
         num_clients, rounds = 32, 3
     local = LocalSpec(epochs=1, batch_size=20)
     corpus, params, (xtr, ytr, parts) = _make_corpus(num_clients, 20)
+    # dtype-lever baseline bytes, captured BEFORE any server shards (and
+    # possibly pads) the corpus: the uint8 ratio compares equal-N layouts
+    f32_nbytes = corpus.nbytes
     cfg = fl.ServerConfig(num_clients=num_clients, participation=0.1, seed=0)
     m = max(1, int(round(num_clients * cfg.participation)))
 
@@ -140,22 +206,29 @@ def run(fast: bool = False, smoke: bool = False, num_clients: int = 100,
         x8, ytr, parts, batch_multiple=20,
         transform=Normalize(scale=(hi - lo) / 255.0, mean=(-lo,)))
     c8.cohort(np.arange(m))                    # prove the gather traces
-    mem = {"float32_bytes": corpus.nbytes, "uint8_bytes": c8.nbytes,
-           "ratio": corpus.nbytes / max(c8.nbytes, 1)}
+    mem = {"float32_bytes": f32_nbytes, "uint8_bytes": c8.nbytes,
+           "ratio": f32_nbytes / max(c8.nbytes, 1)}
+
+    # uneven-mesh placement A/B: replicated fallback vs padded shards
+    uneven = _uneven_ab(xtr, ytr, parts, params, cfg, local, rounds)
 
     base = results["host-slice"]
     cor = results["corpus"]
     reduction = base["h2d_bytes_per_round"] / max(
         cor["h2d_bytes_per_round"], 1)
+    pad = next(l for l in uneven["layouts"] if l["layout"] == "padded")
     rows = [
         ("dataplane_host_slice", f"{base['s_per_round'] * 1e6:.0f}",
          f"{base['h2d_bytes_per_round']}B/round"),
         ("dataplane_corpus", f"{cor['s_per_round'] * 1e6:.0f}",
          f"{cor['h2d_bytes_per_round']}B/round"),
         ("dataplane_h2d_reduction", "0", f"{reduction:.0f}x"),
+        ("dataplane_uneven_padded", f"{pad['s_per_round'] * 1e6:.0f}",
+         f"{uneven['device_bytes_ratio']:.2f}x device bytes vs replicated"),
     ]
     blob = {"results": list(results.values()),
             "h2d_reduction": reduction, "resident_memory": mem,
+            "uneven_mesh": uneven,
             "num_clients": num_clients, "cohort": m, "rounds": rounds,
             "devices": len(jax.devices()),
             "backend": jax.default_backend()}
@@ -179,6 +252,11 @@ def main() -> None:
         print(",".join(str(x) for x in r), flush=True)
     print(f"h2d: {blob['h2d_reduction']:.0f}x fewer bytes/round; "
           f"resident uint8 {blob['resident_memory']['ratio']:.1f}x smaller")
+    u = blob["uneven_mesh"]
+    print(f"uneven mesh ({blob['num_clients']} clients / {u['devices']} "
+          f"devices): padded layout keeps "
+          f"{u['device_bytes_ratio']:.2f}x of the replicated per-device "
+          f"bytes resident")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(blob, f, indent=1)

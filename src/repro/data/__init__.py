@@ -1,8 +1,9 @@
 from . import corpus, ingest, partition, synthetic
-from .corpus import ClientCorpus, DataQueue, Normalize
+from .corpus import ClientCorpus, DataQueue, Normalize, pad_client_axis
 from .ingest import load_cifar10, load_image_corpus
 
 __all__ = [
     "ClientCorpus", "DataQueue", "Normalize", "corpus", "ingest",
-    "load_cifar10", "load_image_corpus", "partition", "synthetic",
+    "load_cifar10", "load_image_corpus", "pad_client_axis", "partition",
+    "synthetic",
 ]

@@ -18,7 +18,17 @@ re-derive per round:
 * **placement** — :meth:`shard` lays the client axis out over a 1-D
   ``("clients",)`` mesh with a ``NamedSharding`` exactly once; subsequent
   cohort gathers run as SPMD programs over the sharded operand and land
-  already distributed for the ``shard_map`` client fan-out.
+  already distributed for the ``shard_map`` client fan-out. Uneven
+  client counts (``N % mesh != 0`` — the paper's N=100 on any realistic
+  accelerator count) are a first-class *padded-shard* layout: the client
+  axis is padded with zero rows (zero ``w`` ⇒ inert clients, tracked by
+  :attr:`client_valid`) up to the next mesh multiple, so every array
+  shards ``P("clients")`` instead of silently replicating. The padding
+  is data-plane only — :attr:`num_clients`, :meth:`sizes`,
+  :meth:`label_histograms`, :meth:`label_entropy` and :meth:`as_numpy`
+  all keep reporting the *real* N, global client ids in :meth:`cohort`
+  are unchanged (padding appends, so the id map is the identity), and
+  :meth:`signature` keys compiled programs on the padded layout.
 
 uint8 images are 4x smaller resident than the float32 corpus they
 replace; normalization happens inside the traced gather, so the float32
@@ -109,6 +119,21 @@ def _as_device(v):
     return jnp.asarray(v)
 
 
+def pad_client_axis(arrays: dict, pad: int) -> dict:
+    """Append ``pad`` zero rows to every array's client axis.
+
+    Zero rows (rather than edge repeats) make padded clients provably
+    inert: their ``w`` mask is all-zero, so even a stray gather of a
+    padded id contributes nothing to any weighted reduction. Real rows
+    are untouched — global client ids keep their positions.
+    """
+    if pad <= 0:
+        return dict(arrays)
+    return {k: jnp.concatenate(
+        [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
+        for k, v in arrays.items()}
+
+
 class ClientCorpus(Mapping):
     """Stacked client arrays resident on device; see the module docstring.
 
@@ -126,6 +151,8 @@ class ClientCorpus(Mapping):
         self._arrays = {k: _as_device(v) for k, v in arrays.items()}
         self.transform = transform
         self._mesh = None
+        self._n = int(next(iter(self._arrays.values())).shape[0])  # real N
+        self._pad = 0                   # zero rows appended by shard()
         self._hists: dict = {}          # num_classes (or None) -> (N, C)
         self._sizes: np.ndarray | None = None
         self._gather = jax.jit(self._gather_impl)
@@ -166,7 +193,21 @@ class ClientCorpus(Mapping):
     # ----------------------------------------------------------- metadata
     @property
     def num_clients(self) -> int:
+        """The *real* client count N — control-plane surfaces never see
+        the padded rows :meth:`shard` may have appended."""
+        return self._n
+
+    @property
+    def padded_num_clients(self) -> int:
+        """Leading-axis length of the resident arrays (N + shard pad)."""
         return int(next(iter(self._arrays.values())).shape[0])
+
+    @property
+    def client_valid(self) -> np.ndarray:
+        """(padded_N,) bool — True for real clients, False for pad rows."""
+        valid = np.zeros(self.padded_num_clients, bool)
+        valid[:self._n] = True
+        return valid
 
     @property
     def samples_per_client(self) -> int:
@@ -174,16 +215,34 @@ class ClientCorpus(Mapping):
             else int(next(iter(self._arrays.values())).shape[1])
 
     def signature(self) -> tuple:
-        """Hashable (key, shape, dtype) + transform tuple for jit caches."""
+        """Hashable (key, shape, dtype) + transform + pad tuple for jit
+        caches — a padded-shard layout must never be served a program
+        compiled for the unpadded (or differently padded) one."""
         return (tuple((k, tuple(v.shape), str(v.dtype))
                       for k, v in sorted(self._arrays.items())),
-                self.transform)
+                self.transform, self._pad)
 
     @property
     def nbytes(self) -> int:
-        """Resident bytes of the stored corpus (storage dtype)."""
+        """Resident bytes of the stored corpus (storage dtype), summed
+        over every device shard (pad rows included)."""
         return int(sum(v.size * v.dtype.itemsize
                        for v in self._arrays.values()))
+
+    def device_nbytes(self) -> int:
+        """Max resident bytes of the corpus on any one addressable device.
+
+        Replicated layouts hold the whole corpus per device (== ``nbytes``
+        for a single-device or replicated placement); the padded-shard
+        layout holds ~``nbytes / mesh`` — the memory win the uneven-mesh
+        A/B in benchmarks/dataplane_bench.py measures.
+        """
+        per: dict = {}
+        for v in self._arrays.values():
+            for s in v.addressable_shards:
+                per[s.device] = per.get(s.device, 0) + int(
+                    s.data.size * s.data.dtype.itemsize)
+        return max(per.values())
 
     def cohort_nbytes(self, m: int) -> int:
         """Bytes a host-slice data plane would ship per round for a cohort
@@ -197,8 +256,9 @@ class ClientCorpus(Mapping):
         return total
 
     def as_numpy(self) -> dict:
-        """Host copy of the raw (untransformed) arrays, storage dtype."""
-        return {k: np.asarray(v) for k, v in self._arrays.items()}
+        """Host copy of the raw (untransformed) arrays, storage dtype,
+        real N rows only (shard pad rows are a placement detail)."""
+        return {k: np.asarray(v)[:self._n] for k, v in self._arrays.items()}
 
     # ------------------------------------------------- control-plane stats
     def sizes(self) -> np.ndarray:
@@ -206,7 +266,8 @@ class ClientCorpus(Mapping):
         if self._sizes is None:
             if "w" in self._arrays:
                 self._sizes = np.asarray(
-                    jnp.sum(self._arrays["w"], axis=1)).astype(np.int64)
+                    jnp.sum(self._arrays["w"][:self._n], axis=1)
+                ).astype(np.int64)
             else:
                 self._sizes = np.full(self.num_clients,
                                       self.samples_per_client, np.int64)
@@ -215,11 +276,12 @@ class ClientCorpus(Mapping):
     def label_histograms(self, num_classes: int | None = None) -> np.ndarray:
         """(N, C) weighted label counts — the grouping/ranking input for
         ``catgroups`` and the ``queue`` selector; computed once per
-        ``num_classes``, host-side (control plane), cached."""
+        ``num_classes``, host-side (control plane), cached. Always real-N
+        rows, whatever the resident padding."""
         if num_classes not in self._hists:
             from ..core.pools import label_histograms
-            y = np.asarray(self._arrays["y"])
-            w = (np.asarray(self._arrays["w"])
+            y = np.asarray(self._arrays["y"])[:self._n]
+            w = (np.asarray(self._arrays["w"])[:self._n]
                  if "w" in self._arrays else None)
             self._hists[num_classes] = label_histograms(
                 y, w, num_classes=num_classes)
@@ -235,21 +297,46 @@ class ClientCorpus(Mapping):
     def shard(self, mesh, axis: str = CLIENT_AXIS) -> "ClientCorpus":
         """Lay the client axis over ``mesh[axis]`` once (idempotent).
 
-        Even shards require ``N % mesh[axis] == 0``; otherwise the corpus
-        is replicated (still device-resident — the gather stays on
-        device either way). Returns self.
+        ``N % mesh[axis] != 0`` is a first-class layout, not a fallback:
+        the client axis is padded with zero rows (:func:`pad_client_axis`)
+        up to the next mesh multiple, so every array shards ``P(axis)``
+        on any mesh size — never replicates. Padding appends, so global
+        client ids are unchanged and :meth:`cohort` needs no id remap;
+        padded clients carry zero weight and are excluded from every
+        control-plane stat (real-N contract). Re-sharding onto a mesh of
+        a different size re-derives the pad from the real rows. Returns
+        self.
         """
         if self._mesh is mesh:
             return self
         from jax.sharding import NamedSharding, PartitionSpec as P
         size = mesh.shape[axis]
+        pad = (-self._n) % size
+        if pad != self._pad:
+            real = {k: v[:self._n] for k, v in self._arrays.items()}
+            self._arrays = pad_client_axis(real, pad)
+            self._pad = pad
+        sharding = NamedSharding(mesh, P(axis))
         for k, v in self._arrays.items():
-            spec = P(axis) if v.shape[0] % size == 0 else P()
-            self._arrays[k] = jax.device_put(v, NamedSharding(mesh, spec))
+            self._arrays[k] = jax.device_put(v, sharding)
         self._mesh = mesh
         return self
 
     # ------------------------------------------------------------ data plane
+    def put_index(self, v) -> jax.Array:
+        """Host index vector -> device, replicated over the corpus mesh.
+
+        Once the corpus is mesh-sharded, a single-device ``idx`` would be
+        resharded device-to-device inside the jitted gather on every call;
+        placing it replicated up front keeps the gather free of implicit
+        transfers (and visible as the only H2D payload per round). This is
+        how a caller pre-stages ``idx`` to prove the gather transfer-free
+        under ``jax.transfer_guard`` on any mesh size."""
+        if self._mesh is None:
+            return jnp.asarray(v)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(v, NamedSharding(self._mesh, P()))
+
     def _gather_impl(self, arrays: dict, idx: jax.Array) -> dict:
         out = {k: v[idx] for k, v in arrays.items()}
         if self.transform is not None and "x" in out:
@@ -274,12 +361,15 @@ class ClientCorpus(Mapping):
         queue costs no extra transfer or copy. Only ``idx`` (and
         ``active``) move host→device; an already-device ``idx`` is used
         as-is, making the gather provably transfer-free (see
-        benchmarks/dataplane_bench.py's tripwire).
+        benchmarks/dataplane_bench.py's tripwire). ``idx`` holds *global*
+        client ids in ``[0, N)`` — the padded-shard layout appends its pad
+        rows, so the id map through the padded operand is the identity
+        and the gather stays SPMD on any mesh size.
         """
         if not isinstance(idx, jax.Array):
-            idx = jnp.asarray(np.asarray(idx), jnp.int32)
+            idx = self.put_index(np.asarray(idx, np.int32))
         if active is None:
             return self._gather(self._arrays, idx)
         if not isinstance(active, jax.Array):
-            active = jnp.asarray(np.asarray(active), jnp.int32)
+            active = self.put_index(np.asarray(active, np.int32))
         return self._gather_queued(self._arrays, idx, active)

@@ -112,7 +112,11 @@ class PipelinedServer(Server):
         # the corpus is laid out over the client mesh exactly once
         # (idempotent): cohort gathers then run as SPMD programs over the
         # sharded operand and land distributed for the shard_map fan-out —
-        # no per-dispatch host→device copy, no per-round resharding
+        # no per-dispatch host→device copy, no per-round resharding.
+        # Uneven N pads to the next mesh multiple (P("clients") always,
+        # never replicated), and the speculative re-dispatch path gathers
+        # from the same padded-sharded operand. Must run before
+        # _client_key(): the signature keys on the padded layout.
         self.corpus.shard(mesh)
         key = ("sharded",) + self._client_key() + (
             mesh.shape[CLIENT_AXIS], self.runtime.donate_data)

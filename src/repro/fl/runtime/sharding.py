@@ -5,9 +5,17 @@ device. Here the stacked client axis is instead partitioned across a
 1-D ``("clients",)`` device mesh with ``shard_map``: each device vmaps
 over its local shard of the cohort, no collectives needed (clients are
 independent until aggregation, which stays in the engine). The cohort is
-padded up to a multiple of the mesh size by repeating the last client row;
-padded outputs are sliced off before judgment so verdicts and aggregation
-see exactly |S_t| clients.
+padded up to a multiple of the mesh size by repeating the last client
+row, and the padded outputs are sliced off before judgment so verdicts
+and aggregation see exactly |S_t| clients — both the pad and the slice
+happen *inside* the one jitted program, so an uneven cohort pays no
+per-round eager ``repeat``/``concatenate`` dispatches.
+
+Cohort padding composes with the corpus's padded-shard layout
+(:meth:`repro.data.corpus.ClientCorpus.shard`): the corpus pads the
+*resident* client axis so an uneven N shards ``P("clients")``, while
+this module pads the *gathered cohort* so an uneven |S_t| shard_maps —
+two independent axes of the same uneven-mesh contract.
 
 ``make_client_mesh`` builds the 1-D mesh over whatever devices exist —
 on a TPU slice that is the whole pod; reuse ``launch.mesh`` for 2-D
@@ -91,21 +99,23 @@ def make_sharded_client_fn(apply_fn: ApplyFn, spec, in_axes, mesh: Mesh,
     in_specs = tuple(P(CLIENT_AXIS) if ax == 0 else P() for ax in axes)
     mapped = shard_map(vm, mesh=mesh, in_specs=in_specs,
                        out_specs=P(CLIENT_AXIS), check_rep=False)
-    # the per-round data slices are fresh buffers — donating them lets XLA
-    # reuse cohort-sized memory across pipelined rounds (no-op on CPU,
-    # which cannot alias donated inputs and would warn every compile)
-    donate_data = donate_data and jax.default_backend() != "cpu"
-    jitted = jax.jit(mapped, donate_argnums=(1,) if donate_data else ())
 
-    def call(global_params, data, *rest):
+    def padded_call(global_params, data, *rest):
+        # pad-to-mesh and slice-back are traced: shapes are static under
+        # jit, so an uneven cohort costs zero eager dispatches per round
+        # (the pad/slice fuse into the compiled program)
         m = jax.tree.leaves(data)[0].shape[0]
         args = (global_params, data) + rest
         padded = tuple(
             pad_to_multiple(a, n) if ax == 0 and a is not None else a
             for a, ax in zip(args, axes))
-        out = jitted(*padded)
+        out = mapped(*padded)
         if jax.tree.leaves(out)[0].shape[0] == m:
             return out
         return jax.tree.map(lambda x: x[:m], out)
 
-    return call
+    # the per-round data slices are fresh buffers — donating them lets XLA
+    # reuse cohort-sized memory across pipelined rounds (no-op on CPU,
+    # which cannot alias donated inputs and would warn every compile)
+    donate_data = donate_data and jax.default_backend() != "cpu"
+    return jax.jit(padded_call, donate_argnums=(1,) if donate_data else ())

@@ -60,6 +60,12 @@ class PoolSelector:
         return cls(config.num_clients, config.eps, config.seed)
 
     def select(self, num: int) -> list[int]:
+        # clamp to the population like UniformSelector/QueueSelector do,
+        # so the Selector surface owns the oversized-draw contract
+        # (DevicePools guards internally too, but a config with
+        # participation * num_clients > num_clients shouldn't depend on
+        # that implementation detail)
+        num = min(num, self.pools.num_devices)
         return self.pools.select(num)
 
     def update(self, positives: Sequence[int],

@@ -229,6 +229,10 @@ class Server:
     def evaluate(self, x: jax.Array, y: jax.Array,
                  batch: int = 512) -> dict:
         n = x.shape[0]
+        if n == 0:
+            # loud, immediate: batch=min(batch,0)=0 would otherwise die in
+            # range(0, 0, 0) before the correct/n ZeroDivisionError could
+            raise ValueError("empty eval set (x has 0 rows)")
         batch = min(batch, n)
         correct, loss_sum = 0.0, 0.0
         f = self._eval_fn()

@@ -1,0 +1,79 @@
+"""Record tests/golden/uneven_history.json from the sequential ``Server``.
+
+Paper-scale reference for the uneven-mesh (padded-shard) layout: N=100
+clients — not divisible by any realistic accelerator count — across the
+fedentropy, fedcat+maxent, and fedentropy+queue compositions. Run from
+the repo root after any INTENTIONAL change to round semantics (never to
+paper over a regression):
+
+    PYTHONPATH=src python tests/golden/record_uneven.py
+
+Recorded from the sequential engine on the default single-device CPU so
+the padded/sharded/speculative engines on any mesh size are all held to
+the same reference (tests/test_uneven_shard.py compares the integer
+verdict history bit-for-bit; entropy floats cross compiled-program
+shapes, so they carry a tolerance there).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.data.partition import partition, stack_clients
+from repro.data.synthetic import make_image_dataset
+from repro.models import cnn
+
+ROUNDS = 3
+PAPER_N, CLASSES = 100, 10
+VARIANTS = {"fedentropy": "fedentropy", "fedcat_maxent": "fedcat+maxent",
+            "fedentropy_queue": "fedentropy+queue"}
+OUT = os.path.join(os.path.dirname(__file__), "uneven_history.json")
+
+
+def paper_corpus():
+    """Mirrors tests/test_uneven_shard.py's ``paper`` fixture exactly."""
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=CLASSES, train_per_class=2 * PAPER_N, test_per_class=10,
+        hw=16, noise=0.9, seed=0)
+    parts = partition("case1", ytr, PAPER_N, CLASSES, seed=0)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=10)
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=16,
+                      num_classes=CLASSES)
+    return data, params
+
+
+def digest(params) -> float:
+    return float(sum(float(jnp.sum(jnp.abs(x)))
+                     for x in jax.tree.leaves(params)))
+
+
+def main() -> None:
+    data, params = paper_corpus()
+    blob = {}
+    for key, comp in VARIANTS.items():
+        server = fl.build(comp, cnn.apply, params, data,
+                          fl.ServerConfig(num_clients=PAPER_N,
+                                          participation=0.1, seed=0,
+                                          group_size=2),
+                          LocalSpec(epochs=1, batch_size=10))
+        records = []
+        for _ in range(ROUNDS):
+            rec = server.round()
+            records.append({
+                "round": rec["round"], "selected": rec["selected"],
+                "positive": rec["positive"], "negative": rec["negative"],
+                "entropy": repr(rec["entropy"]),
+                "total_bytes": rec["comm"]["total_bytes"],
+            })
+        blob[key] = {"history": records,
+                     "params_digest": repr(digest(server.global_params))}
+    with open(OUT, "w") as f:
+        json.dump(blob, f, indent=1)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -259,7 +259,11 @@ def test_queue_selector_speculation_transparent(tiny):
     for a, b in zip(seq.history, spec.history):
         assert a["selected"] == b["selected"]
         assert a["positive"] == b["positive"]
-        assert a["entropy"] == pytest.approx(b["entropy"], abs=1e-12)
+        # bit-level on one device; across a forced multi-device mesh the
+        # sharded engine's fan-out is a different compiled program shape,
+        # where CPU XLA floats are not bitwise-stable (ints stay exact)
+        atol = 1e-12 if len(jax.devices()) == 1 else 1e-6
+        assert a["entropy"] == pytest.approx(b["entropy"], abs=atol)
     # the queue actually withheld data early on: round-0 cohort trained on
     # fewer effective samples than the full shard
     act = seq.selector.queue.active(0, seq.corpus.sizes())

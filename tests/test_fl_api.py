@@ -230,3 +230,34 @@ def test_server_owns_its_cache(tiny):
                   LocalSpec(epochs=1, batch_size=20))
     s1.round()
     assert len(s1._jit_cache) == 1 and len(s2._jit_cache) == 0
+
+
+# -------------------------------------------- selector / eval edge guards
+
+def test_pool_selector_clamps_oversized_draw(tiny):
+    """participation * num_clients > num_clients must clamp to the
+    population (like UniformSelector/QueueSelector), not over-draw."""
+    sel = fl.PoolSelector(8)
+    got = sel.select(12)
+    assert sorted(got) == list(range(8))          # everyone, exactly once
+    # end to end: an oversaturated config still runs a full round
+    data, params = tiny
+    server = fl.build("fedentropy", cnn.apply, params, data,
+                      fl.ServerConfig(num_clients=8, participation=1.5,
+                                      seed=0),
+                      LocalSpec(epochs=1, batch_size=20))
+    rec = server.round()
+    assert sorted(rec["selected"]) == list(range(8))
+    assert len(rec["positive"]) + len(rec["negative"]) == 8
+
+
+def test_evaluate_empty_eval_set_fails_loudly(tiny):
+    """n=0 raises a clear ValueError instead of dying in range(0, 0, 0)."""
+    data, params = tiny
+    server = fl.build("fedavg", cnn.apply, params, data,
+                      fl.ServerConfig(num_clients=8, participation=0.5),
+                      LocalSpec(epochs=1, batch_size=20))
+    x = jnp.zeros((0, 16, 16, 3), jnp.float32)
+    y = jnp.zeros((0,), jnp.int32)
+    with pytest.raises(ValueError, match="empty eval set"):
+        server.evaluate(x, y)

@@ -137,6 +137,28 @@ def test_uneven_cohort_vs_mesh_padding_unchanged_for_vmap_path(tiny):
     assert out["soft_label"].shape[0] == 3
 
 
+def test_sharded_client_fn_pads_inside_the_traced_program(tiny):
+    """Cohort pad-to-mesh and slice-back are traced, not eager: the
+    wrapper IS the jitted program (one dispatch per round, the
+    repeat/concatenate fuse into it), and repeated uneven cohorts reuse
+    a single compiled entry per shape. Uses the FULL device mesh so the
+    multidevice CI job (8 forced devices, cohort 3 -> pad 8) traces a
+    real pad; on one device the pad degenerates to identity."""
+    data, params = tiny
+    strat = fl.FedAvgStrategy(LocalSpec(epochs=1, batch_size=20))
+    mesh = make_client_mesh()
+    fn = make_sharded_client_fn(cnn.apply, strat.spec,
+                                strat.client_in_axes(), mesh)
+    assert hasattr(fn, "lower")                   # a jit stage, not a closure
+    cohort = {k: v[np.asarray([0, 1, 2])] for k, v in data.items()}
+    for _ in range(2):
+        out = fn(params, cohort, None, None, None)
+        assert out["soft_label"].shape[0] == 3
+    cache_size = getattr(fn, "_cache_size", None)
+    if cache_size is not None:
+        assert cache_size() == 1                  # one program, reused
+
+
 # ------------------------------------------- process cache under a sweep
 
 def _build(tiny, runtime, name="fedentropy"):

@@ -23,6 +23,16 @@ from repro.models import cnn
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
                       "seed_history.json")
 
+# On a single device every engine compiles the identical program, so
+# entropy is reproducible to the bit. Under a forced multi-device mesh
+# (the XLA_FLAGS=--xla_force_host_platform_device_count CI job) the
+# auto-sharded fan-out vmaps a different batch size than the recorder
+# did, and CPU XLA is not bitwise-stable across batch sizes — verdict
+# and selection ints stay exact, entropy floats carry a tolerance.
+_SINGLE_DEVICE = len(jax.devices()) == 1
+ENT_ATOL = 1e-9 if _SINGLE_DEVICE else 1e-6        # vs recorded goldens
+ENT_ATOL_ENGINES = 1e-12 if _SINGLE_DEVICE else 1e-6   # engine vs engine
+
 
 @pytest.fixture(scope="module")
 def tiny():
@@ -62,7 +72,7 @@ def _assert_matches_golden(history, golden):
         if np.isnan(ent):
             assert np.isnan(g["entropy"])
         else:
-            assert g["entropy"] == pytest.approx(ent, abs=1e-9)
+            assert g["entropy"] == pytest.approx(ent, abs=ENT_ATOL)
 
 
 # golden variant -> fl.build arguments (same mapping the legacy shim uses)
@@ -179,7 +189,8 @@ def test_forced_shard_map_matches_sequential(tiny):
         assert g["selected"] == w["selected"]
         assert g["positive"] == w["positive"]
         assert g["negative"] == w["negative"]
-        assert g["entropy"] == pytest.approx(w["entropy"], abs=1e-12)
+        assert g["entropy"] == pytest.approx(w["entropy"],
+                                             abs=ENT_ATOL_ENGINES)
     for a, b in zip(jax.tree.leaves(sharded.global_params),
                     jax.tree.leaves(seq.global_params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

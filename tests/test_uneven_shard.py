@@ -1,0 +1,272 @@
+"""The padded-shard data plane for uneven client counts (N % mesh != 0).
+
+The paper's N=100 is not divisible by any realistic accelerator count;
+``ClientCorpus.shard`` pads the client axis with zero rows up to the
+next mesh multiple and shards ``P("clients")`` instead of silently
+replicating. Control-plane surfaces (``num_clients``/``sizes``/
+``label_histograms``/``as_numpy``) keep reporting the real N, global
+client ids map through the padded layout unchanged, and the golden
+verdict histories stay bit-for-bit across Server / PipelinedServer with
+speculation on and off.
+
+Placement needs real devices: the multi-device tests here run under the
+CI job that forces ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(and skip on the default single-device suite), while a subprocess smoke
+exercises the core layout claims from the single-device suite too.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.data.corpus import ClientCorpus, pad_client_axis
+from repro.data.partition import partition, stack_clients
+from repro.data.synthetic import make_image_dataset
+from repro.fl.runtime import RuntimeConfig, make_client_mesh
+from repro.models import cnn
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "uneven_history.json")
+PAPER_N, CLASSES = 100, 10
+
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs a multi-device mesh (run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@pytest.fixture(scope="module")
+def paper():
+    """Identical to the setup tests/golden/record_uneven.py recorded."""
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=CLASSES, train_per_class=2 * PAPER_N, test_per_class=10,
+        hw=16, noise=0.9, seed=0)
+    parts = partition("case1", ytr, PAPER_N, CLASSES, seed=0)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=10)
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=16,
+                      num_classes=CLASSES)
+    return data, params
+
+
+# ------------------------------------------------------- padding (any mesh)
+
+def test_pad_client_axis_zero_rows():
+    """Pad rows are zeros in every array (zero w => provably inert
+    clients), real rows and dtypes untouched, identity at pad=0."""
+    arrays = {"x": jnp.arange(24, dtype=jnp.uint8).reshape(4, 6),
+              "y": jnp.ones((4, 6), jnp.int32),
+              "w": jnp.ones((4, 6), jnp.float32)}
+    padded = pad_client_axis(arrays, 3)
+    for k, v in padded.items():
+        assert v.shape[0] == 7 and v.dtype == arrays[k].dtype
+        np.testing.assert_array_equal(np.asarray(v[:4]),
+                                      np.asarray(arrays[k]))
+        np.testing.assert_array_equal(np.asarray(v[4:]), 0)
+    same = pad_client_axis(arrays, 0)
+    for k in arrays:
+        assert same[k] is arrays[k]
+
+
+# --------------------------------------------------- placement (multi-dev)
+
+@multidevice
+def test_padded_shard_layout_real_n_control_plane(paper):
+    """ISSUE acceptance: on an 8-device mesh with N=100 the corpus shards
+    P("clients") with padded leading axis 104 (never replicates), the
+    busiest device holds ~1/8 of the padded bytes (13/100 of the
+    replicated total), and every control-plane stat reports the real N."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    data, _ = paper
+    corpus = ClientCorpus.from_stacked(dict(data))
+    unpadded_nbytes = corpus.nbytes
+    mesh = make_client_mesh()
+    ndev = mesh.shape["clients"]
+    assert corpus.shard(mesh) is corpus
+    corpus.shard(mesh)                                   # idempotent
+    padded_n = PAPER_N + (-PAPER_N) % ndev
+    assert corpus.padded_num_clients == padded_n
+    assert corpus.num_clients == PAPER_N                 # real N
+    for v in corpus.values():
+        assert v.sharding.spec == P("clients"), v.sharding  # no replication
+    # per-device resident bytes shrink vs replication: a replicated
+    # layout holds the full corpus on every device
+    rep = jax.device_put(np.asarray(data["x"]), NamedSharding(mesh, P()))
+    rep_dev_bytes = next(iter(rep.addressable_shards)).data.size \
+        * rep.dtype.itemsize
+    assert rep_dev_bytes == data["x"].nbytes
+    assert corpus.device_nbytes() * ndev <= corpus.nbytes + ndev
+    assert corpus.device_nbytes() < unpadded_nbytes / (ndev / 2)
+    # control plane: real N everywhere, pad rows invisible
+    assert corpus.client_valid.sum() == PAPER_N
+    assert not corpus.client_valid[PAPER_N:].any()
+    assert corpus.sizes().shape == (PAPER_N,)
+    assert (corpus.sizes() > 0).all()
+    assert corpus.label_histograms().shape[0] == PAPER_N
+    assert corpus.label_entropy().shape == (PAPER_N,)
+    assert corpus.as_numpy()["y"].shape[0] == PAPER_N
+    # signature keys on the padded layout (compiled-program cache safety)
+    fresh = ClientCorpus.from_stacked(dict(data))
+    assert corpus.signature() != fresh.signature()
+
+
+@multidevice
+def test_padded_cohort_matches_host_reference(paper):
+    """Gathers of global client ids through the padded layout equal the
+    host-slice reference bit-for-bit, and stay transfer-free."""
+    data, _ = paper
+    corpus = ClientCorpus.from_stacked(dict(data))
+    corpus.shard(make_client_mesh())
+    idx = np.array([0, 7, 99, 42, 13, 98])        # spans shard boundaries
+    got = corpus.cohort(idx)
+    for k in data:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(data[k])[idx])
+    # device-resident idx (replicated over the corpus mesh): zero host
+    # bytes cross the boundary during the gather
+    didx = corpus.put_index(idx.astype(np.int32))
+    corpus.cohort(didx)                           # compile outside guard
+    with jax.transfer_guard("disallow"):
+        got2 = corpus.cohort(didx)
+    for k in data:
+        np.testing.assert_array_equal(np.asarray(got2[k]),
+                                      np.asarray(data[k])[idx])
+
+
+@multidevice
+def test_reshard_onto_different_mesh_rederives_pad(paper):
+    """Re-sharding onto a mesh of another size re-pads from the real rows
+    (no pad-on-pad), and cohorts still match the host reference."""
+    data, _ = paper
+    corpus = ClientCorpus.from_stacked(dict(data))
+    devs = jax.devices()
+    corpus.shard(make_client_mesh(devs[:3]))      # 100 -> 102
+    assert corpus.padded_num_clients == 102
+    corpus.shard(make_client_mesh(devs))          # 100 -> 104, from real N
+    assert corpus.padded_num_clients == PAPER_N + (-PAPER_N) % len(devs)
+    assert corpus.num_clients == PAPER_N
+    idx = np.array([3, 57, 99])
+    got = corpus.cohort(idx)
+    for k in data:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(data[k])[idx])
+
+
+# ------------------------------------------------ golden round equivalence
+
+def _hist_ints(h):
+    return [(r["selected"], r["positive"], r["negative"],
+             r["comm"]["total_bytes"]) for r in h]
+
+
+@pytest.mark.parametrize("variant,comp", [
+    ("fedentropy", "fedentropy"),
+    ("fedcat_maxent", "fedcat+maxent"),
+    ("fedentropy_queue", "fedentropy+queue"),
+])
+@multidevice
+def test_uneven_golden_histories_all_engines(paper, variant, comp):
+    """ISSUE acceptance: at N=100 on the uneven mesh, Server and
+    PipelinedServer (speculation on AND off) reproduce the recorded
+    verdict histories bit-for-bit. Integer fields (selection, verdicts,
+    comm bytes) are exact everywhere; entropy floats cross compiled
+    program shapes (a sharded fan-out vmaps a different batch size than
+    the single-device recorder), where CPU XLA is not bitwise-stable, so
+    they carry a float tolerance — while spec-on vs spec-off run the same
+    programs and must agree on everything, entropy bits included."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)[variant]
+    data, params = paper
+    cfg = fl.ServerConfig(num_clients=PAPER_N, participation=0.1, seed=0,
+                          group_size=2)
+    local = LocalSpec(epochs=1, batch_size=10)
+    engines = {
+        "seq": fl.build(comp, cnn.apply, params, data, cfg, local),
+        "off": fl.build(comp, cnn.apply, params, data, cfg, local,
+                        engine="pipelined", runtime=RuntimeConfig()),
+        "spec": fl.build(comp, cnn.apply, params, data, cfg, local,
+                         engine="pipelined",
+                         runtime=RuntimeConfig(speculate=True)),
+    }
+    rounds = len(golden["history"])
+    for server in engines.values():
+        for _ in range(rounds):
+            server.round()
+    for name, server in engines.items():
+        assert _hist_ints(server.history) == [
+            (g["selected"], g["positive"], g["negative"], g["total_bytes"])
+            for g in golden["history"]], name
+        for rec, g in zip(server.history, golden["history"]):
+            assert rec["entropy"] == pytest.approx(float(g["entropy"]),
+                                                   abs=1e-6), name
+    # the sharded engines really ran the padded layout
+    for name in ("off", "spec"):
+        corpus = engines[name].corpus
+        assert corpus.padded_num_clients > PAPER_N
+        from jax.sharding import PartitionSpec as P
+        assert all(v.sharding.spec == P("clients")
+                   for v in corpus.values())
+    # spec-on and spec-off: same compiled programs, bit-identical history
+    off, spec = engines["off"].history, engines["spec"].history
+    for a, b in zip(off, spec):
+        assert a["selected"] == b["selected"]
+        assert a["positive"] == b["positive"]
+        assert a["negative"] == b["negative"]
+        assert a["entropy"] == b["entropy"]               # exact bits
+
+
+# ------------------------------------------------- single-device subprocess
+
+_SMOKE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.data.corpus import ClientCorpus
+from repro.fl.runtime import make_client_mesh
+assert len(jax.devices()) == 8, jax.devices()
+n, s = 10, 6                                  # 10 % 8 != 0 -> pad to 16
+rng = np.random.default_rng(0)
+data = {"x": rng.normal(size=(n, s, 3)).astype(np.float32),
+        "y": rng.integers(0, 4, size=(n, s)).astype(np.int32),
+        "w": np.ones((n, s), np.float32)}
+corpus = ClientCorpus.from_stacked(data)
+full = corpus.nbytes
+mesh = make_client_mesh()
+corpus.shard(mesh)
+assert corpus.padded_num_clients == 16 and corpus.num_clients == n
+assert all(v.sharding.spec == P("clients") for v in corpus.values())
+assert corpus.device_nbytes() * 4 < full      # 2/16 rows per device
+assert corpus.sizes().shape == (n,)
+idx = np.array([0, 9, 3])
+got = corpus.cohort(idx)
+for k in data:
+    np.testing.assert_array_equal(np.asarray(got[k]), data[k][idx])
+didx = corpus.put_index(idx.astype(np.int32))
+corpus.cohort(didx)
+with jax.transfer_guard("disallow"):
+    jax.block_until_ready(corpus.cohort(didx)["x"])
+print("UNEVEN-SMOKE-OK")
+"""
+
+
+def test_padded_shard_smoke_under_forced_devices():
+    """The single-device tier-1 suite still exercises the real placement:
+    a subprocess forces 8 host devices and asserts the padded-shard
+    claims (P("clients") layout, per-device bytes shrink, host-reference
+    gathers, transfer-free device-idx path)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SMOKE], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "UNEVEN-SMOKE-OK" in out.stdout
