@@ -1,0 +1,198 @@
+"""Async buffered engine: flush throughput + admission comm savings.
+
+Three drivers on the reduced CNN corpus, compared at EQUAL flush count
+(one async flush aggregates a buffer of K screened arrivals; one
+synchronous round aggregates a full cohort — both ship exactly one
+global-model assignment, so flushes/sec vs rounds/sec is the honest
+throughput comparison):
+
+  * ``fedavg_sync``      — sequential ``Server``, plain FedAvg: every
+                           selected client uploads its model each round
+                           (the round-synchronous baseline the paper's
+                           comm numbers are quoted against);
+  * ``fedentropy_sync``  — sequential ``Server``, max-entropy judgment:
+                           round-synchronous, but only positive clients
+                           ship models;
+  * ``async_straggler``  — ``AsyncBufferedServer`` under the straggler
+                           arrival clock (25% of clients 8x slower),
+                           staleness damping α=0.5: arrivals are screened
+                           one tie-batch at a time, rejected updates
+                           never ship weights, admitted ones aggregate
+                           with ``(1+τ)^-α`` damping.
+
+The JSON blob sums uplink bytes over each engine's history and records
+``async_model_bytes_lt_fedavg`` — the acceptance gate that the
+straggler-clock async run ships strictly fewer uploaded-model bytes than
+round-synchronous FedAvg at equal flush count.
+
+Smoke mode (CI): best-of-5 blocks of 5 flushes each on a tiny 8-client
+composition, artifact written to ``BENCH_async.json``:
+
+  PYTHONPATH=src python -m benchmarks.async_throughput --smoke \
+      --out BENCH_async.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.fl.runtime import (
+    AsyncConfig, disable_process_cache, enable_process_cache,
+    process_cache,
+)
+
+from .common import make_setup
+
+# deliberately matches the recorded straggler golden + the engine tests
+STRAGGLER = dict(clock="straggler", latency_scale=1.0, straggler_frac=0.25,
+                 straggler_factor=8.0, staleness_alpha=0.5, seed=0)
+
+# name -> (composition, build kwargs)
+DRIVERS = {
+    "fedavg_sync": ("fedavg", dict(engine=None, runtime=None)),
+    "fedentropy_sync": ("fedentropy", dict(engine=None, runtime=None)),
+    "async_straggler": ("fedentropy",
+                        dict(engine="async",
+                             runtime=AsyncConfig(**STRAGGLER))),
+}
+
+COMM_KEYS = ("soft_label_bytes", "model_bytes", "total_bytes",
+             "fedavg_equivalent_bytes")
+
+
+def _build(name: str, setup, local: LocalSpec, num_clients: int,
+           participation: float, apply_fn):
+    data, params, _ = setup
+    comp, kwargs = DRIVERS[name]
+    return fl.build(comp, apply_fn, params, data,
+                    fl.ServerConfig(num_clients=num_clients,
+                                    participation=participation, seed=0),
+                    local, **kwargs)
+
+
+def time_drivers(setup, local: LocalSpec, num_clients: int,
+                 participation: float, apply_fn, flushes: int,
+                 repeats: int = 5) -> list[dict]:
+    """Best-of-``repeats`` timed blocks of ``flushes`` flushes per driver,
+    interleaved round-robin so host-load drift hits every driver equally.
+    Comm totals come from the FULL history (warmup + all blocks), so the
+    savings ratios are averaged over many flushes, not one block."""
+    def sync(server):
+        jax.block_until_ready(server.global_params)
+
+    servers = {}
+    for name in DRIVERS:
+        s = _build(name, setup, local, num_clients, participation, apply_fn)
+        s.round()                             # warmup: compile + dispatch
+        sync(s)
+        servers[name] = s
+    best = {name: float("inf") for name in DRIVERS}
+    for _ in range(repeats):
+        for name, server in servers.items():
+            t0 = time.perf_counter()
+            for _ in range(flushes):
+                server.round()
+            sync(server)
+            best[name] = min(best[name], time.perf_counter() - t0)
+    results = []
+    for name, server in servers.items():
+        dt = best[name]
+        hist = server.history
+        comm = {k: sum(h["comm"][k] for h in hist) for k in COMM_KEYS}
+        rec = {"driver": name, "flushes": flushes, "wall_s": dt,
+               "flushes_per_s": flushes / dt, "s_per_flush": dt / flushes,
+               "repeats": repeats, "history_flushes": len(hist),
+               "admitted": sum(len(h["positive"]) for h in hist),
+               "rejected": sum(len(h["negative"]) for h in hist),
+               "comm": comm,
+               "model_bytes_per_flush": comm["model_bytes"] / len(hist)}
+        if "staleness" in hist[-1]:
+            stale = [t for h in hist for t in h["staleness"]]
+            rec["staleness_max"] = max(stale)
+            rec["staleness_mean"] = sum(stale) / len(stale)
+            rec["buffer_occupancy_max"] = max(
+                h["buffer_occupancy"] for h in hist)
+        results.append(rec)
+    return results
+
+
+def run(fast: bool = False, smoke: bool = False):
+    """Benchmark-harness entry: returns (csv_rows, json_blob)."""
+    from repro.models import cnn
+
+    if smoke:
+        num_clients, participation, flushes = 8, 0.5, 5
+        local = LocalSpec(epochs=1, batch_size=20)
+    elif fast:
+        num_clients, participation, flushes = 16, 0.25, 5
+        local = LocalSpec(epochs=1, batch_size=24)
+    else:
+        num_clients, participation, flushes = 32, 0.156, 20
+        local = LocalSpec(epochs=2, batch_size=24)
+
+    setup = make_setup("case1", 0)
+    if smoke or fast:   # trim the corpus to the reduced client count
+        data, params, test = setup
+        data = {k: v[:num_clients] for k, v in data.items()}
+        setup = (data, params, test)
+
+    enable_process_cache(maxsize=16)
+    try:
+        results = time_drivers(setup, local, num_clients, participation,
+                               cnn.apply, flushes)
+        cache_stats = process_cache().stats()
+    finally:
+        disable_process_cache()
+
+    by_name = {r["driver"]: r for r in results}
+    fedavg_models = by_name["fedavg_sync"]["comm"]["model_bytes"]
+    async_models = by_name["async_straggler"]["comm"]["model_bytes"]
+    rows = []
+    for r in results:
+        r["model_bytes_vs_fedavg"] = (r["comm"]["model_bytes"] /
+                                      max(fedavg_models, 1))
+        rows.append((f"async_{r['driver']}",
+                     f"{r['s_per_flush'] * 1e6:.0f}",
+                     f"{r['flushes_per_s']:.3f}fps/"
+                     f"{r['model_bytes_vs_fedavg']:.3f}xB"))
+    blob = {"results": results, "compile_cache": cache_stats,
+            "num_clients": num_clients, "participation": participation,
+            "flushes": flushes,
+            "fedavg_model_bytes": fedavg_models,
+            "async_model_bytes": async_models,
+            # acceptance gate: straggler-clock async ships strictly fewer
+            # model bytes than round-synchronous fedavg at equal flushes
+            "async_model_bytes_lt_fedavg": async_models < fedavg_models,
+            "devices": len(jax.devices()),
+            "backend": jax.default_backend()}
+    return rows, blob
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny composition, 5-flush blocks")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="",
+                    help="write the JSON blob here (BENCH_async.json)")
+    args = ap.parse_args()
+    rows, blob = run(fast=args.fast, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)
+    print("async model bytes < fedavg:",
+          blob["async_model_bytes_lt_fedavg"],
+          f"({blob['async_model_bytes']} vs {blob['fedavg_model_bytes']})")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(blob, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

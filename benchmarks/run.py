@@ -15,8 +15,9 @@ import json
 import os
 import sys
 
-from . import ablation_fig3, accuracy_table1, comm_table2, \
-    dataplane_bench, engine_throughput, microbench, roofline, synergy_table3
+from . import ablation_fig3, accuracy_table1, async_throughput, \
+    comm_table2, dataplane_bench, engine_throughput, microbench, roofline, \
+    synergy_table3
 
 TABLES = {
     "table1": accuracy_table1.run,
@@ -27,6 +28,7 @@ TABLES = {
     "roofline": roofline.run,
     "engine": engine_throughput.run,
     "dataplane": dataplane_bench.run,
+    "async": async_throughput.run,
 }
 
 

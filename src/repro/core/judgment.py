@@ -49,6 +49,7 @@ def judge(
     active: jax.Array | None = None,
     max_removals: int | None = None,
     backend: str = "xla",
+    protected: jax.Array | None = None,
 ) -> JudgmentResult:
     """Algorithm 1 as a ``lax.while_loop`` — trace-compatible.
 
@@ -61,6 +62,10 @@ def judge(
                         never empty the set regardless).
     backend:     "xla" (pure jnp leave-one-out sweep) or "pallas" (the
                         entropy_judge kernel — class-axis-tiled, for huge C).
+    protected:   (M,)   optional 0/1 mask of devices that contribute to the
+                        group entropy but are never removal candidates —
+                        the async engine's already-admitted buffer, whose
+                        weights have already shipped.
     """
     soft_labels = jnp.asarray(soft_labels, jnp.float32)
     sizes = jnp.asarray(sizes, jnp.float32)
@@ -68,6 +73,9 @@ def judge(
     if active is None:
         active = jnp.ones((m,), jnp.float32)
     active = jnp.asarray(active, jnp.float32)
+    if protected is None:
+        protected = jnp.zeros((m,), jnp.float32)
+    protected = jnp.asarray(protected, jnp.float32)
     cap = m - 1 if max_removals is None else int(max_removals)
 
     init_ent = group_entropy(soft_labels, sizes, active)
@@ -87,8 +95,8 @@ def judge(
     def body(state):
         mask, ent, removed, _, order = state
         loo = _loo(mask)                                         # (M,)
-        # only currently-active devices are candidates
-        cand = jnp.where(mask > 0, loo, -jnp.inf)
+        # only currently-active, unprotected devices are candidates
+        cand = jnp.where((mask > 0) & (protected == 0), loo, -jnp.inf)
         best = jnp.argmax(cand)
         best_ent = cand[best]
         improves = best_ent > ent + _TOL
@@ -163,12 +171,15 @@ def judge_np(
     soft_labels: np.ndarray,
     sizes: np.ndarray,
     active: np.ndarray | None = None,
+    protected: np.ndarray | None = None,
 ) -> tuple[list[int], list[int], float]:
     """Literal Algorithm 1. Returns (A, R, final_entropy) with device indices.
 
     Per paper lines 2-19: iteratively find the single member whose removal
     maximises getEntropy of the remainder; move it from A to R; stop when no
-    removal strictly improves the entropy (line 13-14).
+    removal strictly improves the entropy (line 13-14). ``protected`` rows
+    (the async engine's already-shipped admission buffer) stay in A and in
+    the entropy, but the sweep never removes them.
     """
     soft_labels = np.asarray(soft_labels, np.float64)
     sizes = np.asarray(sizes, np.float64)
@@ -186,6 +197,8 @@ def judge_np(
     while len(A) > 1:
         best_k, best_ent = None, ent
         for k in A:  # paper line 5: sweep candidates
+            if protected is not None and protected[k] > 0:
+                continue
             trial = mask.copy()
             trial[k] = 0.0
             e = group_entropy_np(soft_labels, sizes, trial)

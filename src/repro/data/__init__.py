@@ -1,9 +1,11 @@
 from . import corpus, ingest, partition, synthetic
 from .corpus import ClientCorpus, DataQueue, Normalize, pad_client_axis
-from .ingest import load_cifar10, load_image_corpus
+from .ingest import (
+    load_cifar10, load_cifar100, load_cinic10, load_image_corpus,
+)
 
 __all__ = [
     "ClientCorpus", "DataQueue", "Normalize", "corpus", "ingest",
-    "load_cifar10", "load_image_corpus", "pad_client_axis", "partition",
-    "synthetic",
+    "load_cifar10", "load_cifar100", "load_cinic10", "load_image_corpus",
+    "pad_client_axis", "partition", "synthetic",
 ]

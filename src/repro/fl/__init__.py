@@ -22,10 +22,12 @@ axis           question it answers                   built-ins
 =============  ====================================  ======================
 
 A fifth registry kind, ``engine``, picks the round *driver* for a
-composition: ``"sequential"`` (the default ``Server``) or ``"pipelined"``
+composition: ``"sequential"`` (the default ``Server``), ``"pipelined"``
 (:mod:`repro.fl.runtime` — mesh-sharded client fan-out + judgment
-speculation), selected per-build via ``build(..., engine=..., runtime=
-RuntimeConfig(...))``.
+speculation), or ``"async"`` (streaming buffered rounds: a deterministic
+simulated arrival clock, per-arrival max-entropy admission, and
+staleness-damped flushes), selected per-build via ``build(...,
+engine=..., runtime=RuntimeConfig(...) | AsyncConfig(...))``.
 
 Compositions are named in a registry so configs and benchmarks stay
 declarative::
@@ -79,16 +81,19 @@ from .strategies import (
     ScaffoldStrategy,
 )
 from . import runtime  # noqa: E402 — registers engines; after .server
-from .runtime import PipelinedServer, RuntimeConfig
+from .runtime import (
+    AsyncBufferedServer, AsyncConfig, PipelinedServer, RuntimeConfig,
+)
 
 __all__ = [
-    "Aggregator", "BoundedJitCache", "BudgetedJudge", "CatChainStrategy",
-    "CatGrouper", "ClientCorpus", "ClientStrategy", "Composition",
-    "DataQueue", "DeviceConcatAggregator", "FedAvgStrategy",
-    "FedProxStrategy", "Judge", "LocalSpec", "MaxEntropyJudge",
-    "MoonStrategy", "Normalize", "PassThroughJudge", "PipelinedServer",
-    "PoolCatGrouper", "PoolSelector", "QueueSelector", "RuntimeConfig",
-    "ScaffoldAggregator", "ScaffoldStrategy", "Selector", "Server",
-    "ServerConfig", "UniformSelector", "WeightedAverageAggregator", "build",
-    "get", "names", "register", "runtime", "total_uplink_bytes",
+    "Aggregator", "AsyncBufferedServer", "AsyncConfig", "BoundedJitCache",
+    "BudgetedJudge", "CatChainStrategy", "CatGrouper", "ClientCorpus",
+    "ClientStrategy", "Composition", "DataQueue", "DeviceConcatAggregator",
+    "FedAvgStrategy", "FedProxStrategy", "Judge", "LocalSpec",
+    "MaxEntropyJudge", "MoonStrategy", "Normalize", "PassThroughJudge",
+    "PipelinedServer", "PoolCatGrouper", "PoolSelector", "QueueSelector",
+    "RuntimeConfig", "ScaffoldAggregator", "ScaffoldStrategy", "Selector",
+    "Server", "ServerConfig", "UniformSelector",
+    "WeightedAverageAggregator", "build", "get", "names", "register",
+    "runtime", "total_uplink_bytes",
 ]

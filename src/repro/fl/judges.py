@@ -21,6 +21,11 @@ greedy-removal order for every backend. Judges additionally expose
 ``core.judgment.JudgmentResult`` — which is how the mesh train step
 (``repro.launch.train``) and the pipelined engine's speculation
 (``repro.fl.runtime``) run the same judge axis on device.
+
+The async buffered engine screens *arriving* updates instead of whole
+rounds: ``MaxEntropyJudge.admit`` judges candidates against the
+already-admitted (protected) buffer, and :func:`admit_candidates` adapts
+any plain round judge to the same candidate-relative admission signature.
 """
 from __future__ import annotations
 
@@ -45,6 +50,41 @@ def _result_to_lists(res: JudgmentResult
     return accepted, rejected, float(res.entropy)
 
 
+def _stack_buffer(buffer_soft, buffer_sizes, cand_soft, cand_sizes):
+    """Concatenate (buffer, candidates) as float64; nb==0 passes the
+    candidate arrays through untouched so admission over an empty buffer
+    is bit-for-bit the plain round judgment (the async engine's reduction
+    guarantee rides on this)."""
+    cand_soft = np.asarray(cand_soft, np.float64)
+    cand_sizes = np.asarray(cand_sizes, np.float64)
+    nb = int(np.shape(buffer_sizes)[0])
+    if nb == 0:
+        return 0, cand_soft, cand_sizes
+    soft = np.concatenate(
+        [np.asarray(buffer_soft, np.float64), cand_soft], axis=0)
+    sizes = np.concatenate(
+        [np.asarray(buffer_sizes, np.float64), cand_sizes], axis=0)
+    return nb, soft, sizes
+
+
+def admit_candidates(judge_obj, buffer_soft, buffer_sizes, cand_soft,
+                     cand_sizes) -> tuple[list[int], list[int], float]:
+    """Admission fallback for judges without an ``admit`` method.
+
+    Runs the judge once over buffer ∪ candidates and reads the verdicts
+    for the candidate rows only (*relative* to the candidate block;
+    rejected in removal order). Buffered rows have already shipped their
+    weights, so a verdict against one of them is ignored here — judges
+    that must never "re-litigate" the buffer implement ``admit`` with a
+    protected sweep instead (see :meth:`MaxEntropyJudge.admit`).
+    """
+    nb, soft, sizes = _stack_buffer(buffer_soft, buffer_sizes,
+                                    cand_soft, cand_sizes)
+    accepted, rejected, ent = judge_obj(soft, sizes)
+    return ([i - nb for i in accepted if i >= nb],
+            [i - nb for i in rejected if i >= nb], ent)
+
+
 @register("judge", "maxent")
 class MaxEntropyJudge:
     """Paper Algorithm 1: drop devices whose removal raises group entropy.
@@ -57,7 +97,8 @@ class MaxEntropyJudge:
         if backend not in ("numpy", "xla", "pallas"):
             raise ValueError(f"unknown judge backend {backend!r}")
         self.backend = backend
-        self._jitted = None      # compiled host-call path, built lazily
+        self._jitted = None       # compiled host-call path, built lazily
+        self._jitted_admit = None  # compiled protected-sweep path (async)
 
     def __call__(self, soft_labels: np.ndarray, sizes: np.ndarray
                  ) -> tuple[list[int], list[int], float]:
@@ -74,6 +115,38 @@ class MaxEntropyJudge:
         backend falls back to the xla sweep (same greedy, float32)."""
         backend = "xla" if self.backend == "numpy" else self.backend
         return lambda soft, sizes: judge(soft, sizes, backend=backend)
+
+    def admit(self, buffer_soft, buffer_sizes, cand_soft, cand_sizes
+              ) -> tuple[list[int], list[int], float]:
+        """Per-arrival admission for the async engine: Algorithm 1's greedy
+        removal over buffer ∪ candidates, with the buffered rows *protected*
+        — they contribute to the group entropy (their weights already
+        shipped) but are never removal candidates. Returns
+        ``(admitted, rejected, entropy)`` relative to the candidate block,
+        rejected in removal order; with an empty buffer this is exactly the
+        round judgment ``__call__`` runs, which is what makes the
+        K=|cohort| zero-latency reduction bit-for-bit.
+        """
+        nb, soft, sizes = _stack_buffer(buffer_soft, buffer_sizes,
+                                        cand_soft, cand_sizes)
+        if nb == 0:
+            return self(soft, sizes)
+        if self.backend == "numpy":
+            prot = np.zeros(len(sizes))
+            prot[:nb] = 1.0
+            accepted, rejected, ent = judge_np(soft, sizes, protected=prot)
+        else:
+            if self._jitted_admit is None:
+                backend = self.backend
+                self._jitted_admit = jax.jit(
+                    lambda s, z, p: judge(s, z, backend=backend,
+                                          protected=p))
+            prot = jnp.zeros((len(sizes),), jnp.float32).at[:nb].set(1.0)
+            res = self._jitted_admit(jnp.asarray(soft, jnp.float32),
+                                     jnp.asarray(sizes, jnp.float32), prot)
+            accepted, rejected, ent = _result_to_lists(res)
+        return ([i - nb for i in accepted if i >= nb],
+                [i - nb for i in rejected if i >= nb], ent)
 
 
 @register("judge", "none")

@@ -89,30 +89,55 @@ def build(name: str, apply_fn, init_params, client_data, config,
 
     ``engine`` picks the round driver (default the sequential
     :class:`repro.fl.Server`; ``"pipelined"`` is the mesh-sharded,
-    speculation-capable :class:`repro.fl.runtime.PipelinedServer`) and
-    ``runtime`` passes a :class:`repro.fl.runtime.RuntimeConfig` to it
-    (a ``runtime`` without an ``engine`` implies ``"pipelined"`` — the
-    engine that config belongs to)::
+    speculation-capable :class:`repro.fl.runtime.PipelinedServer`;
+    ``"async"`` is the streaming buffered
+    :class:`repro.fl.runtime.AsyncBufferedServer`) and ``runtime`` passes
+    that engine's config to it — a :class:`repro.fl.runtime.RuntimeConfig`
+    for sequential/pipelined, an :class:`repro.fl.runtime.AsyncConfig` for
+    async. A ``runtime`` without an ``engine`` implies the engine the
+    config belongs to (RuntimeConfig → ``"pipelined"``, AsyncConfig →
+    ``"async"``); an unknown engine name raises ``ValueError`` listing the
+    registered names, and an engine/runtime type mismatch errors here
+    rather than deep in construction::
 
         build("fedentropy", ..., engine="pipelined",
               runtime=RuntimeConfig(speculate=True, spec_backend="pallas"))
+        build("fedentropy", ..., engine="async",
+              runtime=AsyncConfig(clock="straggler", staleness_alpha=0.5))
     """
     from ..core.strategies import LocalSpec
-    from . import runtime as _runtime  # noqa: F401 — registers engines
+    from . import runtime as _runtime  # registers engines
     from .server import Server
 
     comp = get("composition", name)
     local = local if local is not None else LocalSpec()
     strat = _instantiate("strategy", strategy or comp.strategy, config, local)
     if engine is None:
-        # a RuntimeConfig is the pipelined engine's config: supplying one
-        # without naming an engine must not silently ignore its knobs
-        engine_cls = Server if runtime is None else get("engine",
-                                                        "pipelined")
+        # a runtime config without a named engine must not silently ignore
+        # its knobs: route to the engine the config type belongs to
+        if runtime is None:
+            engine_cls = Server
+        elif isinstance(runtime, _runtime.AsyncConfig):
+            engine_cls = get("engine", "async")
+        else:
+            engine_cls = get("engine", "pipelined")
     elif isinstance(engine, str):
-        engine_cls = get("engine", engine)
+        try:
+            engine_cls = get("engine", engine)
+        except KeyError:
+            raise ValueError(
+                f"unknown engine {engine!r}; registered engines: "
+                f"{', '.join(names('engine'))}") from None
     else:
         engine_cls = engine
+    expected = getattr(engine_cls, "runtime_cls", None)
+    if runtime is not None and expected is not None \
+            and not isinstance(runtime, expected):
+        raise ValueError(
+            f"engine {engine_cls.__name__} takes runtime="
+            f"{expected.__name__}, got {type(runtime).__name__} "
+            "(RuntimeConfig drives sequential/pipelined, AsyncConfig "
+            "drives async)")
     kwargs = {}
     if runtime is not None:
         kwargs["runtime"] = runtime

@@ -1,27 +1,40 @@
-"""``repro.fl.runtime`` — pipelined, mesh-sharded execution engines.
+"""``repro.fl.runtime`` — pipelined, sharded, and streaming round engines.
 
-The same four composition axes as :class:`repro.fl.Server`, driven by an
-engine that (a) shards the stacked client axis over a ``("clients",)``
-device mesh via ``shard_map``, (b) overlaps the host-side float64
+The same four composition axes as :class:`repro.fl.Server`, driven by
+engines that (a) shard the stacked client axis over a ``("clients",)``
+device mesh via ``shard_map``, (b) overlap the host-side float64
 judgment oracle with the next round's client compute by speculating the
-verdict on device (XLA or Pallas ``entropy_judge_sweep`` backends), and
-(c) optionally shares compiled programs across servers through a bounded
-process-level cache.
+verdict on device (XLA or Pallas ``entropy_judge_sweep`` backends),
+(c) optionally share compiled programs across servers through a bounded
+process-level cache, and (d) — the async buffered engine — drop the
+round barrier entirely: clients stream updates under a deterministic
+simulated arrival clock, max-entropy judgment admits or rejects each
+arrival against the buffered group, and flushes aggregate with
+staleness-damped weights (see :mod:`.async_engine`).
 
 Build through the registry::
 
     import repro.fl as fl
-    from repro.fl.runtime import RuntimeConfig
+    from repro.fl.runtime import AsyncConfig, RuntimeConfig
 
     server = fl.build("fedentropy", apply_fn, params, data, config,
                       engine="pipelined",
                       runtime=RuntimeConfig(speculate=True,
                                             spec_backend="pallas"))
+    streaming = fl.build("fedentropy", apply_fn, params, data, config,
+                         engine="async",
+                         runtime=AsyncConfig(clock="straggler",
+                                             staleness_alpha=0.5))
 
 With ``RuntimeConfig()`` defaults (no speculation, shard="auto") the
-engine reproduces sequential ``Server`` round histories bit-for-bit on
-fixed seeds; see tests/test_runtime_engine.py.
+pipelined engine reproduces sequential ``Server`` round histories
+bit-for-bit on fixed seeds (tests/test_runtime_engine.py); with
+``AsyncConfig()`` defaults (K=|cohort|, zero-latency clock, damping off)
+so does the async engine (tests/test_async_engine.py).
 """
+from .async_engine import (
+    ArrivalClock, AsyncBufferedServer, AsyncConfig, staleness_weights,
+)
 from .compile_cache import (
     ProcessCompileCache, disable_process_cache, enable_process_cache,
     process_cache,
@@ -33,8 +46,9 @@ from .sharding import (
 )
 
 __all__ = [
-    "CLIENT_AXIS", "PipelinedServer", "ProcessCompileCache", "RuntimeConfig",
+    "ArrivalClock", "AsyncBufferedServer", "AsyncConfig", "CLIENT_AXIS",
+    "PipelinedServer", "ProcessCompileCache", "RuntimeConfig",
     "SequentialEngine", "client_mesh_from", "disable_process_cache",
     "enable_process_cache", "make_client_mesh", "make_sharded_client_fn",
-    "pad_to_multiple", "process_cache",
+    "pad_to_multiple", "process_cache", "staleness_weights",
 ]

@@ -71,6 +71,8 @@ class SequentialEngine(Server):
     """Alias of :class:`repro.fl.Server` under the engine registry; accepts
     (and ignores) ``runtime=`` so ``build(..., engine=...)`` is uniform."""
 
+    runtime_cls = RuntimeConfig   # build() rejects mismatched configs
+
     def __init__(self, *args, runtime: RuntimeConfig | None = None,
                  **kwargs):
         super().__init__(*args, **kwargs)
@@ -81,10 +83,18 @@ class SequentialEngine(Server):
 class PipelinedServer(Server):
     """Pipelined/sharded drop-in for ``Server`` (same composition axes)."""
 
+    runtime_cls = RuntimeConfig   # build() rejects mismatched configs
+
     def __init__(self, *args, runtime: RuntimeConfig | None = None,
                  mesh=None, **kwargs):
         super().__init__(*args, **kwargs)
         self.runtime = runtime or RuntimeConfig()
+        if not isinstance(self.runtime, RuntimeConfig):
+            # loud on direct construction too (build() catches it earlier):
+            # an AsyncConfig here would half-work until .speculate access
+            raise ValueError(
+                f"{type(self).__name__} takes runtime=RuntimeConfig, got "
+                f"{type(self.runtime).__name__}")
         self._mesh = mesh
         self._pending = None           # (sel, out) dispatched for round t+1
         self._redispatch_next = False  # previous speculation missed

@@ -7,11 +7,14 @@ Two execution paths, one composition API:
   judge axis traced *inside* the step (``Judge.traced()``, optionally the
   Pallas sweep via ``--judge-backend pallas``), the selector feeding mesh
   client slots per round.
-* ``--engine sequential | pipelined`` — the weights-level ``repro.fl``
-  server (paper Alg. 2 with E local epochs) over the same token corpus,
-  built with ``fl.build(..., engine=...)``; ``pipelined`` adds the runtime
-  subsystem's mesh-sharded client fan-out and (``--speculate``) verdict
-  speculation.
+* ``--engine sequential | pipelined | async`` — the weights-level
+  ``repro.fl`` server (paper Alg. 2 with E local epochs) over the same
+  token corpus, built with ``fl.build(..., engine=...)``; ``pipelined``
+  adds the runtime subsystem's mesh-sharded client fan-out and
+  (``--speculate``) verdict speculation, ``async`` streams client updates
+  under a simulated arrival clock (``--clock``) with per-arrival
+  max-entropy admission, flushing every ``--buffer-size`` arrivals with
+  ``--staleness-alpha`` damping.
 
 Every axis — selector, judge, engine — resolves through ``repro.fl``
 registries, so both paths run the identical composition code the
@@ -144,8 +147,18 @@ def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
     config, selector, judge = _components(args, host_oracle=True)
     data = stack_lm_clients(corpus, client_idx, args.samples_per_client,
                             args.seq_len, args.seed)
-    runtime = fl.RuntimeConfig(speculate=args.speculate,
-                               spec_backend=args.judge_backend)
+    if args.engine == "async":
+        if args.speculate:
+            raise SystemExit(
+                "--speculate is a pipelined-engine knob: the async engine "
+                "has no round barrier to overlap the oracle with")
+        runtime = fl.AsyncConfig(
+            buffer_size=args.buffer_size,
+            staleness_alpha=args.staleness_alpha,
+            clock=args.clock, seed=args.seed)
+    else:
+        runtime = fl.RuntimeConfig(speculate=args.speculate,
+                                   spec_backend=args.judge_backend)
     if args.method:
         # named composition (e.g. fedcat): its own selector/judge axes
         # resolve from the registry via config (--group-size sizes chains);
@@ -174,6 +187,10 @@ def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
         if "spec_hit" in rec:
             extra = (f" spec={'hit' if rec['spec_hit'] else 'miss'}"
                      f"{' redispatched' if rec['redispatched'] else ''}")
+        if "staleness" in rec:
+            extra = (f" t={rec['flush_time']:.2f}"
+                     f" stale_max={max(rec['staleness'])}"
+                     f" buf={rec['buffer_occupancy']}")
         print(f"round {it:4d} pos={len(rec['positive'])}/"
               f"{len(rec['selected'])} ent={rec['entropy']:.4f}"
               f" comm={rec['comm']['total_bytes']}B{extra}", flush=True)
@@ -269,9 +286,21 @@ def main() -> None:
     ap.add_argument("--group-size", type=int, default=2,
                     help="FedCAT chain length (fedcat compositions)")
     ap.add_argument("--engine", default="mesh",
-                    choices=["mesh", "sequential", "pipelined"],
+                    choices=["mesh", "sequential", "pipelined", "async"],
                     help="mesh = gradient-level jitted step; sequential/"
-                         "pipelined = weights-level repro.fl engines")
+                         "pipelined/async = weights-level repro.fl "
+                         "engines (async streams arrivals through "
+                         "max-entropy admission)")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="async engine: screened arrivals per flush "
+                         "(0 = cohort size, the reduction case)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.0,
+                    help="async engine: (1+tau)^-alpha damping of "
+                         "admitted updates (0 = off)")
+    ap.add_argument("--clock", default="zero",
+                    choices=["zero", "uniform", "straggler"],
+                    help="async engine: simulated per-client arrival "
+                         "latency model (seeded, virtual time)")
     ap.add_argument("--selector", default="pools",
                     choices=["pools", "uniform", "queue"],
                     help="repro.fl Selector driving client admission "

@@ -1,0 +1,89 @@
+"""Record tests/golden/async_history.json from ``AsyncBufferedServer``.
+
+Two reduction variants (buffer K = |cohort|, zero-latency clock, damping
+off — contractually bit-for-bit equal to the sequential ``Server``, i.e.
+to the matching variants of seed_history.json) plus one straggler-clock
+variant that pins the async-specific record fields (flush virtual time,
+staleness distribution, arrival sequence ids). Run from the repo root
+after any INTENTIONAL change to flush semantics (never to paper over a
+regression):
+
+    PYTHONPATH=src python tests/golden/record_async.py
+
+Recorded on the default single-device CPU; tests/test_async_engine.py
+compares the integer verdict/stream history bit-for-bit everywhere and
+gives entropy floats a tolerance under forced multi-device meshes (same
+policy as the other goldens).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.data.partition import partition, stack_clients
+from repro.data.synthetic import make_image_dataset
+from repro.models import cnn
+
+ROUNDS = 3
+OUT = os.path.join(os.path.dirname(__file__), "async_history.json")
+
+# variant -> (composition, AsyncConfig)
+VARIANTS = {
+    "fedentropy": ("fedentropy", fl.AsyncConfig()),
+    "fedavg_uniform": ("fedavg", fl.AsyncConfig()),
+    "fedentropy_straggler": ("fedentropy", fl.AsyncConfig(
+        clock="straggler", latency_scale=1.0, straggler_frac=0.25,
+        straggler_factor=8.0, staleness_alpha=0.5, seed=0)),
+}
+
+
+def tiny_corpus():
+    """Mirrors tests/test_runtime_engine.py's ``tiny`` fixture exactly."""
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=4, train_per_class=60, test_per_class=15, hw=16,
+        noise=0.4, seed=0)
+    parts = partition("case1", ytr, 8, 4, seed=0)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=20)
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=16, num_classes=4)
+    return data, params
+
+
+def digest(params) -> float:
+    return float(sum(float(jnp.sum(jnp.abs(x)))
+                     for x in jax.tree.leaves(params)))
+
+
+def main() -> None:
+    data, params = tiny_corpus()
+    blob = {}
+    for key, (comp, runtime) in VARIANTS.items():
+        server = fl.build(comp, cnn.apply, params, data,
+                          fl.ServerConfig(num_clients=8, participation=0.5,
+                                          seed=0),
+                          LocalSpec(epochs=1, batch_size=20),
+                          engine="async", runtime=runtime)
+        records = []
+        for _ in range(ROUNDS):
+            rec = server.round()
+            records.append({
+                "round": rec["round"], "selected": rec["selected"],
+                "positive": rec["positive"], "negative": rec["negative"],
+                "entropy": repr(rec["entropy"]),
+                "total_bytes": rec["comm"]["total_bytes"],
+                "flush_time": repr(rec["flush_time"]),
+                "staleness": rec["staleness"],
+                "seq": rec["seq"],
+                "admitted_seq": rec["admitted_seq"],
+            })
+        blob[key] = {"history": records,
+                     "params_digest": repr(digest(server.global_params))}
+    with open(OUT, "w") as f:
+        json.dump(blob, f, indent=1)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""CIFAR-100 / CINIC-10 ingest and dataset auto-detection.
+
+Fake on-disk releases in the real formats: CIFAR-100 as the python
+pickle (``train``/``test`` files with ``fine_labels``), CINIC-10 as the
+class-directory layout (png images when Pillow is present, per-class
+.npy stacks always). The synthetic fallback and CIFAR-10 path are
+covered in tests/test_corpus_dataplane.py.
+"""
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.data.corpus import Normalize
+from repro.data.ingest import (
+    CIFAR100_MEAN, CINIC10_MEAN, load_cifar100, load_cinic10,
+    load_image_corpus,
+)
+
+_CLASSES = ("airplane", "automobile", "bird", "cat")
+
+
+def _write_fake_cifar100(root, n_train=40, n_test=10):
+    d = os.path.join(root, "cifar-100-python")
+    os.makedirs(d, exist_ok=True)
+    rng = np.random.default_rng(0)
+    for name, n in (("train", n_train), ("test", n_test)):
+        blob = {b"data": rng.integers(0, 256, size=(n, 3072),
+                                      dtype=np.uint8),
+                b"fine_labels": rng.integers(0, 100, size=n).tolist(),
+                b"coarse_labels": rng.integers(0, 20, size=n).tolist()}
+        with open(os.path.join(d, name), "wb") as f:
+            pickle.dump(blob, f)
+    return d
+
+
+def _write_fake_cinic(root, per_class=3, use_png=False):
+    rng = np.random.default_rng(0)
+    for part in ("train", "test"):
+        for cname in _CLASSES:
+            cdir = os.path.join(root, part, cname)
+            os.makedirs(cdir, exist_ok=True)
+            imgs = rng.integers(0, 256, size=(per_class, 32, 32, 3),
+                                dtype=np.uint8)
+            if use_png:
+                from PIL import Image
+                for i in range(per_class):
+                    Image.fromarray(imgs[i]).save(
+                        os.path.join(cdir, f"img_{i:03d}.png"))
+            else:
+                np.save(os.path.join(cdir, "stack.npy"), imgs)
+    return root
+
+
+# ------------------------------------------------------------- CIFAR-100
+
+def test_load_cifar100_pickles(tmp_path):
+    d = _write_fake_cifar100(str(tmp_path))
+    (xtr, ytr), (xte, yte) = load_cifar100(str(tmp_path))
+    assert xtr.shape == (40, 32, 32, 3) and xtr.dtype == np.uint8
+    assert ytr.shape == (40,) and ytr.dtype == np.int32
+    assert xte.shape == (10, 32, 32, 3) and yte.shape == (10,)
+    # fine labels, not coarse: range may exceed 20
+    with open(os.path.join(d, "train"), "rb") as f:
+        blob = pickle.load(f, encoding="bytes")
+    np.testing.assert_array_equal(ytr, np.asarray(blob[b"fine_labels"]))
+    # the release dir itself also resolves
+    (x2, _), _ = load_cifar100(d)
+    np.testing.assert_array_equal(x2, xtr)
+
+
+def test_load_cifar100_missing_is_loud(tmp_path):
+    with pytest.raises(FileNotFoundError, match="CIFAR-100"):
+        load_cifar100(str(tmp_path))
+
+
+# -------------------------------------------------------------- CINIC-10
+
+def test_load_cinic10_npy_stacks(tmp_path):
+    _write_fake_cinic(str(tmp_path), per_class=3)
+    (xtr, ytr), (xte, yte) = load_cinic10(str(tmp_path))
+    assert xtr.shape == (12, 32, 32, 3) and xtr.dtype == np.uint8
+    # class ids follow sorted directory names
+    np.testing.assert_array_equal(ytr, np.repeat(np.arange(4), 3))
+    assert xte.shape == (12, 32, 32, 3)
+
+
+def test_load_cinic10_png_images(tmp_path):
+    pytest.importorskip("PIL")
+    _write_fake_cinic(str(tmp_path), per_class=2, use_png=True)
+    (xtr, ytr), _ = load_cinic10(str(tmp_path))
+    assert xtr.shape == (8, 32, 32, 3) and xtr.dtype == np.uint8
+    np.testing.assert_array_equal(ytr, np.repeat(np.arange(4), 2))
+    # png round-trip is lossless: re-read matches the written pixels
+    rng = np.random.default_rng(0)
+    first = rng.integers(0, 256, size=(2, 32, 32, 3), dtype=np.uint8)
+    np.testing.assert_array_equal(xtr[:2], first)
+
+
+def test_load_cinic10_empty_class_dir_is_loud(tmp_path):
+    cdir = tmp_path / "train" / "cat"
+    cdir.mkdir(parents=True)
+    (tmp_path / "test" / "cat").mkdir(parents=True)
+    with pytest.raises(FileNotFoundError, match="no .npy"):
+        load_cinic10(str(tmp_path))
+
+
+def test_load_cinic10_missing_is_loud(tmp_path):
+    with pytest.raises(FileNotFoundError, match="CINIC-10"):
+        load_cinic10(str(tmp_path))
+
+
+# ------------------------------------------------- detection + normalizers
+
+def test_image_corpus_detects_cifar100(tmp_path):
+    _write_fake_cifar100(str(tmp_path))
+    src = load_image_corpus(str(tmp_path))
+    assert src.source == "cifar100" and src.num_classes == 100
+    assert isinstance(src.transform, Normalize)
+    assert src.transform.mean == CIFAR100_MEAN
+
+
+def test_image_corpus_detects_cinic10(tmp_path):
+    _write_fake_cinic(str(tmp_path))
+    src = load_image_corpus(str(tmp_path))
+    assert src.source == "cinic10" and src.num_classes == 10
+    assert src.transform.mean == CINIC10_MEAN
+
+
+def test_image_corpus_explicit_dataset_overrides_detection(tmp_path):
+    _write_fake_cinic(str(tmp_path))
+    src = load_image_corpus(str(tmp_path), dataset="cinic10")
+    assert src.source == "cinic10"
+    with pytest.raises(FileNotFoundError, match="CIFAR-100"):
+        load_image_corpus(str(tmp_path), dataset="cifar100")
+
+
+def test_image_corpus_rejects_unknown_dataset(tmp_path):
+    _write_fake_cinic(str(tmp_path))
+    with pytest.raises(ValueError, match="unknown dataset"):
+        load_image_corpus(str(tmp_path), dataset="imagenet")
+    with pytest.raises(ValueError, match="needs a root"):
+        load_image_corpus(None, dataset="cinic10")
+
+
+def test_image_corpus_empty_root_is_loud(tmp_path):
+    with pytest.raises(FileNotFoundError, match="dataset="):
+        load_image_corpus(str(tmp_path))

@@ -267,7 +267,11 @@ def test_engine_registry(tiny):
     from repro.fl.runtime import PipelinedServer, SequentialEngine
     assert fl.get("engine", "pipelined") is PipelinedServer
     assert fl.get("engine", "sequential") is SequentialEngine
-    with pytest.raises(KeyError, match="no engine registered"):
+    # unknown engine names fail in build() with the registered names listed
+    # (not a KeyError deep in construction) — see tests/test_async_engine.py
+    # for the engine/runtime mismatch matrix
+    with pytest.raises(ValueError, match="unknown engine 'warp'.*async.*"
+                                         "pipelined.*sequential"):
         _build(tiny, engine="warp")
     assert isinstance(_build(tiny), PipelinedServer)
     assert isinstance(_build(tiny, engine=None), fl.Server)
