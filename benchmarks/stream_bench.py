@@ -1,0 +1,189 @@
+"""Streaming data plane A/B: device-resident vs host-resident cohorts.
+
+Two measurements, one blob (``BENCH_stream.json``):
+
+* **Paper-scale A/B (N=100)** — the same fedentropy composition runs on
+  the pipelined engine with speculation against both planes; histories
+  must stay int-identical (the plane-equivalence contract the golden
+  tests hold), so the A/B isolates the data-plane cost: round latency,
+  device-resident bytes, and — on the streaming side — the prefetch hit
+  rate and the staging latency the speculation overlap actually hid.
+
+* **Large-N smoke (N ≥ 50 000 synthetic)** — the residency claim at the
+  scale the resident plane cannot reach: a 50k-client `HostCorpus`
+  serves prefetched cohorts while its *device* footprint stays bounded
+  by the cohort (O(|S_t|)), not the population (O(N)). The blob records
+  the measured device/corpus byte ratio and asserts it; the prefetch
+  counters report hit rate and overlap at this scale too.
+
+  PYTHONPATH=src python -m benchmarks.stream_bench --smoke \
+      --out BENCH_stream.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.data.partition import partition
+from repro.data.stream import HostCorpus
+from repro.data.synthetic import make_image_dataset
+from repro.fl.runtime import RuntimeConfig
+from repro.models import cnn
+
+
+def _time_rounds(server, rounds: int) -> float:
+    server.round()                            # warmup: compile + dispatch
+    jax.block_until_ready(server.global_params)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        server.round()
+    jax.block_until_ready(server.global_params)
+    return (time.perf_counter() - t0) / rounds
+
+
+def _make_data(num_clients: int, batch: int):
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=10, train_per_class=2 * num_clients, test_per_class=2,
+        hw=16, noise=0.9, seed=0)
+    parts = partition("case1", ytr, num_clients, 10, seed=0)
+    from repro.data.partition import stack_clients
+    data = stack_clients(xtr, ytr, parts, batch_multiple=batch)
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=16, num_classes=10)
+    return data, params
+
+
+def _plane_ab(num_clients: int, rounds: int) -> dict:
+    """Resident vs streaming, pipelined + speculation, int-equal history."""
+    data, params = _make_data(num_clients, 10)
+    cfg = fl.ServerConfig(num_clients=num_clients, participation=0.1,
+                          seed=0)
+    local = LocalSpec(epochs=1, batch_size=10)
+    out, ints = {}, {}
+    for plane in ("resident", "streaming"):
+        server = fl.build("fedentropy", cnn.apply, params, dict(data),
+                          cfg, local, engine="pipelined",
+                          runtime=RuntimeConfig(speculate=True),
+                          data_plane=plane)
+        s_per_round = _time_rounds(server, rounds)
+        rep = server.corpus.memory_report()
+        rec = {"plane": plane, "s_per_round": s_per_round,
+               "memory": rep,
+               "spec_hits": int(sum(r["spec_hit"]
+                                    for r in server.history))}
+        if plane == "streaming":
+            rec["prefetch"] = server.corpus.prefetch_stats()
+        out[plane] = rec
+        ints[plane] = [(r["selected"], r["positive"], r["negative"])
+                       for r in server.history]
+    # plane equivalence: the A/B timed identical verdict streams
+    assert ints["resident"] == ints["streaming"], \
+        "planes diverged — the A/B is meaningless"
+    out["histories_int_equal"] = True
+    return out
+
+
+def _large_n_smoke(big_n: int, cohort: int, gathers: int) -> dict:
+    """N >= 50k synthetic: device bytes stay O(|cohort|), never O(N)."""
+    rng = np.random.default_rng(0)
+    s, hw = 8, 8
+    corpus = HostCorpus({
+        "x": rng.integers(0, 256, (big_n, s, hw, hw, 1), dtype=np.uint8),
+        "y": rng.integers(0, 10, (big_n, s)).astype(np.int32),
+        "w": np.ones((big_n, s), np.float32),
+    }, stats_chunk=4096)
+    assert corpus.label_histograms().shape == (big_n, 10)
+    t0 = time.perf_counter()
+    cohorts = [rng.integers(0, big_n, cohort) for _ in range(gathers)]
+    corpus.prefetch(cohorts[0])
+    for i, idx in enumerate(cohorts):
+        out = corpus.cohort(idx)              # consumes the staged upload
+        if i + 1 < len(cohorts):
+            corpus.prefetch(cohorts[i + 1])   # overlap the next one
+        jax.block_until_ready(out["x"])
+    dt = (time.perf_counter() - t0) / gathers
+    rep = corpus.memory_report()
+    pf = corpus.prefetch_stats()
+    # the acceptance bound: what the device holds is the staged cohort
+    # (uint8 storage == upload bytes; +1 in-flight prefetch), not N rows
+    bound = 2 * corpus.cohort_nbytes(cohort)
+    ok = rep["device_resident_bytes"] <= bound
+    assert ok, (rep, bound)
+    return {"num_clients": big_n, "cohort": cohort, "gathers": gathers,
+            "s_per_gather": dt, "memory": rep, "prefetch": pf,
+            "device_bytes_over_corpus":
+                rep["device_resident_bytes"] / corpus.nbytes,
+            "device_bytes_bound": bound,
+            "device_bytes_o_cohort": bool(ok)}
+
+
+def run(fast: bool = False, smoke: bool = False, num_clients: int = 100,
+        rounds: int = 3, big_n: int = 50_000):
+    """Benchmark-harness entry: returns (csv_rows, json_blob)."""
+    if smoke:
+        num_clients, rounds, big_n = 100, 3, 50_000   # pinned for CI
+    elif fast:
+        num_clients, rounds, big_n = 32, 3, 10_000
+    m = max(1, num_clients // 10)
+    ab = _plane_ab(num_clients, rounds)
+    big = _large_n_smoke(big_n, cohort=max(m, 64), gathers=6)
+
+    res, strm = ab["resident"], ab["streaming"]
+    pf = strm["prefetch"]
+    rows = [
+        ("stream_resident", f"{res['s_per_round'] * 1e6:.0f}",
+         f"{res['memory']['device_resident_bytes']}B resident"),
+        ("stream_streaming", f"{strm['s_per_round'] * 1e6:.0f}",
+         f"hit_rate={pf['hit_rate']:.2f}"),
+        ("stream_overlap", f"{pf['overlap_s'] * 1e6:.0f}",
+         f"{pf['stage_s'] * 1e6:.0f}us staged off-thread"),
+        ("stream_large_n", f"{big['s_per_gather'] * 1e6:.0f}",
+         f"{big['device_bytes_over_corpus']:.2e}x corpus bytes on device"),
+    ]
+    blob = {"plane_ab": ab, "large_n": big,
+            "prefetch_hit_rate": pf["hit_rate"],
+            "prefetch_overlap_s": pf["overlap_s"],
+            "large_n_device_bytes_o_cohort":
+                big["device_bytes_o_cohort"],
+            "num_clients": num_clients, "cohort": m, "rounds": rounds,
+            "devices": len(jax.devices()),
+            "backend": jax.default_backend()}
+    return rows, blob
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: N=100 A/B + 50k-client residency smoke")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--clients", type=int, default=100)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--big-n", type=int, default=50_000)
+    ap.add_argument("--out", default="",
+                    help="write the JSON blob here (BENCH_stream.json)")
+    args = ap.parse_args()
+    rows, blob = run(fast=args.fast, smoke=args.smoke,
+                     num_clients=args.clients, rounds=args.rounds,
+                     big_n=args.big_n)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)
+    big = blob["large_n"]
+    print(f"large-N: {big['num_clients']} clients host-resident, "
+          f"{big['memory']['device_resident_bytes']}B on device "
+          f"({big['device_bytes_over_corpus']:.2e}x of the corpus); "
+          f"prefetch hit rate {blob['prefetch_hit_rate']:.2f}, "
+          f"overlap {blob['prefetch_overlap_s'] * 1e3:.1f}ms")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(blob, f, indent=1, default=str)
+        print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,13 @@
-from . import corpus, ingest, partition, synthetic
+from . import corpus, ingest, partition, stream, synthetic
 from .corpus import ClientCorpus, DataQueue, Normalize, pad_client_axis
 from .ingest import (
     load_cifar10, load_cifar100, load_cinic10, load_image_corpus,
 )
+from .stream import CohortPrefetcher, HostCorpus, as_data_plane
 
 __all__ = [
-    "ClientCorpus", "DataQueue", "Normalize", "corpus", "ingest",
+    "ClientCorpus", "CohortPrefetcher", "DataQueue", "HostCorpus",
+    "Normalize", "as_data_plane", "corpus", "ingest",
     "load_cifar10", "load_cifar100", "load_cinic10", "load_image_corpus",
-    "pad_client_axis", "partition", "synthetic",
+    "pad_client_axis", "partition", "stream", "synthetic",
 ]

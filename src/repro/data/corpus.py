@@ -142,6 +142,8 @@ class ClientCorpus(Mapping):
     (shape probes, signature keys) keep working unchanged.
     """
 
+    plane = "resident"
+
     def __init__(self, arrays: dict, *, transform: Normalize | None = None):
         if not arrays:
             raise ValueError("ClientCorpus needs at least one array")
@@ -259,6 +261,20 @@ class ClientCorpus(Mapping):
         """Host copy of the raw (untransformed) arrays, storage dtype,
         real N rows only (shard pad rows are a placement detail)."""
         return {k: np.asarray(v)[:self._n] for k, v in self._arrays.items()}
+
+    def memory_report(self) -> dict:
+        """Plane-aware byte accounting, same schema as the streaming
+        plane's (:meth:`repro.data.stream.HostCorpus.memory_report`):
+        the resident plane keeps the whole corpus on device and holds no
+        host mapping or staging buffers."""
+        return {
+            "plane": self.plane,
+            "host_mapped_bytes": 0,
+            "host_is_mmap": False,
+            "device_resident_bytes": self.device_nbytes(),
+            "staging_nbytes": 0,
+            "num_clients": self._n,
+        }
 
     # ------------------------------------------------- control-plane stats
     def sizes(self) -> np.ndarray:

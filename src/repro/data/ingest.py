@@ -21,10 +21,15 @@ use: it auto-detects which of the three layouts lives under ``root``
 (or takes ``dataset=`` explicitly), fails loudly on an empty root, and
 falls back to the synthetic class-template dataset when no root is
 given, attaching the right ``Normalize`` transform and a ``source`` tag
-so runs record what they trained on.
+so runs record what they trained on. The first real load writes a
+packed ``.npy`` cache next to the dataset
+(``<root>/repro-packed/<name>/``); repeated runs memory-map it
+(``np.load(mmap_mode="r")``) instead of re-parsing pickles/PNGs, and
+:class:`repro.data.stream.HostCorpus` can map the same files directly.
 """
 from __future__ import annotations
 
+import json
 import os
 import pickle
 from dataclasses import dataclass
@@ -180,6 +185,60 @@ _DATASETS = {
     "cinic10": (load_cinic10, cinic10_normalizer, 10),
 }
 
+# ------------------------------------------------------- packed .npy cache
+# First real load of a dataset writes its splits as plain .npy files next
+# to the dataset (``<root>/repro-packed/<name>/``); every later load
+# reopens them with ``np.load(mmap_mode="r")`` — no pickle/PNG parsing,
+# no host copy of the full set, and exactly the layout
+# ``repro.data.stream.HostCorpus`` memory-maps directly.
+
+_PACKED_DIRNAME = "repro-packed"
+_SPLIT_KEYS = ("x_train", "y_train", "x_test", "y_test")
+
+
+def packed_cache_dir(root: str, name: str) -> str:
+    """Where :func:`load_image_corpus` packs dataset ``name`` under
+    ``root``."""
+    return os.path.join(root, _PACKED_DIRNAME, name)
+
+
+def load_packed(cache_dir: str):
+    """Memory-mapped ``((xtr, ytr), (xte, yte))`` from a packed cache
+    directory, or None when absent/incomplete (corrupt caches fall back
+    to the real loader rather than fail the run)."""
+    if not os.path.isfile(os.path.join(cache_dir, "meta.json")):
+        return None
+    try:
+        a = [np.load(os.path.join(cache_dir, f"{k}.npy"), mmap_mode="r")
+             for k in _SPLIT_KEYS]
+    except (OSError, ValueError):  # pragma: no cover — corrupt cache
+        return None
+    return (a[0], a[1]), (a[2], a[3])
+
+
+def write_packed(cache_dir: str, name: str, train: tuple,
+                 test: tuple) -> None:
+    """Pack the loaded splits; meta.json lands last so a partial write
+    never looks like a complete cache."""
+    os.makedirs(cache_dir, exist_ok=True)
+    for k, v in zip(_SPLIT_KEYS, (*train, *test)):
+        np.save(os.path.join(cache_dir, f"{k}.npy"), np.ascontiguousarray(v))
+    with open(os.path.join(cache_dir, "meta.json"), "w") as f:
+        json.dump({"dataset": name, "keys": list(_SPLIT_KEYS)}, f)
+
+
+def _detect_packed(root: str) -> str | None:
+    """Dataset name of a packed cache under ``root``, if one exists —
+    lets auto-detection skip the raw-layout probe entirely."""
+    base = os.path.join(root, _PACKED_DIRNAME)
+    if not os.path.isdir(base):
+        return None
+    for name in sorted(os.listdir(base)):
+        if name in _DATASETS and os.path.isfile(
+                os.path.join(base, name, "meta.json")):
+            return name
+    return None
+
 
 def _detect_dataset(root: str) -> str:
     """Which of the three on-disk layouts lives under ``root``."""
@@ -211,6 +270,7 @@ class ImageCorpusSource:
 
 
 def load_image_corpus(root: str | None = None, *, dataset: str = "auto",
+                      cache: bool = True,
                       num_classes: int = 10,
                       train_per_class: int = 500, test_per_class: int = 100,
                       hw: int = 16, noise: float = 0.9,
@@ -218,21 +278,41 @@ def load_image_corpus(root: str | None = None, *, dataset: str = "auto",
     """Real images from ``root``; synthetic when no ``root`` is given.
 
     A non-empty ``root`` MUST hold one of the known layouts —
-    ``dataset="auto"`` (default) probes CIFAR-10, then CIFAR-100, then
-    CINIC-10, and a missing or not-yet-populated directory raises
-    ``FileNotFoundError`` rather than silently training on synthetic
-    data. The synthetic keyword set mirrors ``make_image_dataset``
-    (reduced scale by default); the real datasets ignore those knobs and
-    return the full uint8 set with the on-device normalizer attached.
+    ``dataset="auto"`` (default) probes a packed cache first, then
+    CIFAR-10, then CIFAR-100, then CINIC-10, and a missing or
+    not-yet-populated directory raises ``FileNotFoundError`` rather than
+    silently training on synthetic data. With ``cache=True`` (default)
+    the first real load writes packed ``.npy`` splits under
+    ``<root>/repro-packed/<dataset>/`` and later loads reopen them with
+    ``np.load(mmap_mode="r")`` — skipping pickle/PNG parsing and giving
+    the streaming data plane a host store it can map without a copy.
+    The synthetic keyword set mirrors ``make_image_dataset`` (reduced
+    scale by default); the real datasets ignore those knobs and return
+    the full uint8 set with the on-device normalizer attached.
     """
     if root:
-        name = _detect_dataset(root) if dataset == "auto" else dataset
+        if dataset == "auto":
+            name = ((_detect_packed(root) if cache else None)
+                    or _detect_dataset(root))
+        else:
+            name = dataset
         if name not in _DATASETS:
             raise ValueError(
                 f"unknown dataset {dataset!r}; expected one of "
                 f"{('auto', *sorted(_DATASETS))}")
         loader, normalizer, ncls = _DATASETS[name]
-        (xtr, ytr), (xte, yte) = loader(root)
+        packed = load_packed(packed_cache_dir(root, name)) if cache \
+            else None
+        if packed is not None:
+            (xtr, ytr), (xte, yte) = packed
+        else:
+            (xtr, ytr), (xte, yte) = loader(root)
+            if cache:
+                try:
+                    write_packed(packed_cache_dir(root, name), name,
+                                 (xtr, ytr), (xte, yte))
+                except OSError:  # read-only dataset mounts are fine
+                    pass
         return ImageCorpusSource((xtr, ytr), (xte, yte), normalizer(),
                                  name, ncls)
     if dataset != "auto":

@@ -1,0 +1,568 @@
+"""Streaming host-resident data plane: the million-client residency
+contract.
+
+:class:`repro.data.corpus.ClientCorpus` stacks *all* N clients on the
+accelerator — perfect at the paper's N=100, impossible at the
+cross-device IoT scale the paper frames (N=10^6). This module inverts the
+residency contract:
+
+* :class:`HostCorpus` keeps the stacked ``x/y/w`` arrays **host-side**
+  (plain numpy or ``np.load(mmap_mode="r")`` memory maps — see
+  :meth:`HostCorpus.save` / :meth:`HostCorpus.open` and the packed
+  ``.npy`` ingest cache in :mod:`repro.data.ingest`), and only the
+  per-round *cohort* ever becomes device-resident: ``cohort(idx)`` is a
+  host gather + H2D upload + the same traced ``Normalize``/queue-mask
+  program the resident plane fuses into its gather. Device bytes are
+  O(|S_t|), never O(N).
+* The control plane scales with it: ``sizes()`` / ``label_histograms()``
+  / ``label_entropy()`` — the stats selectors rank and group on — are
+  computed in **one streaming pass over client chunks at open time**,
+  never materializing a dense (N, S, ...) float corpus anywhere. The
+  per-chunk math is exactly the dense math (same
+  ``core.pools.label_histograms`` rows, same row-local reductions), so
+  streamed stats equal :class:`ClientCorpus`'s bit-for-bit.
+* :class:`CohortPrefetcher` overlaps round t's compute with round t+1's
+  upload: a background thread gathers the *speculated* next selection
+  into double-buffered staging arrays and ships them to the device while
+  the main thread blocks in the float64 judgment oracle.
+  ``PipelinedServer``'s verdict speculation predicts the next selection
+  early (the same throwaway-selector draw it already dispatches against);
+  on a selector misprediction the staged buffers are discarded and the
+  next round falls back to a synchronous gather.
+
+Both planes share the ``signature()`` contract — the plane is part of
+the key, so compiled programs built against one plane are never served
+to the other — and both answer :func:`memory_report` with plane-aware
+host-mapped / device-resident / staging byte accounting.
+
+:func:`as_data_plane` is the single wiring point ``repro.fl`` builds
+through: ``"resident"`` / ``"streaming"`` force a plane, ``"auto"``
+(default) keeps the resident fast path while the corpus fits
+(:data:`RESIDENT_BUDGET_BYTES`) and streams past it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections.abc import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .corpus import CLIENT_AXIS, ClientCorpus, Normalize
+
+PLANES = ("resident", "streaming", "auto")
+
+# "auto" keeps the corpus device-resident while its storage-dtype bytes
+# fit this budget, and streams past it (override per call site). The
+# default is deliberately conservative: every paper-scale corpus in the
+# repo is a few MB, so existing compositions keep the resident fast path.
+RESIDENT_BUDGET_BYTES = 1 << 30
+
+# clients per streaming-stats chunk: bounds the host working set of the
+# open-time pass at chunk * S * itemsize bytes regardless of N
+STATS_CHUNK_CLIENTS = 4096
+
+
+def _host_array(v) -> np.ndarray:
+    """Device/host array -> host numpy, preserving dtype; memory maps and
+    existing ndarrays pass through without a copy."""
+    if isinstance(v, np.ndarray):
+        return v
+    return np.asarray(v)
+
+
+class HostCorpus(Mapping):
+    """Host-resident stacked client corpus; see the module docstring.
+
+    Shares :class:`ClientCorpus`'s surface — ``Mapping`` over the raw
+    arrays, ``cohort(idx, active=None)``, ``signature()``, the cached
+    control-plane stats, ``shard(mesh)`` (placement *recording* here:
+    uploads replicate over the mesh, the corpus itself never moves) —
+    so servers, selectors, and strategies take either plane unchanged.
+    """
+
+    plane = "streaming"
+
+    def __init__(self, arrays: dict, *, transform: Normalize | None = None,
+                 stats_chunk: int = STATS_CHUNK_CLIENTS):
+        if not arrays:
+            raise ValueError("HostCorpus needs at least one array")
+        n = {k: np.shape(v)[0] for k, v in arrays.items()}
+        if len(set(n.values())) != 1:
+            raise ValueError(f"client axes disagree: {n}")
+        self._arrays = {k: _host_array(v) for k, v in arrays.items()}
+        self.transform = transform
+        self._mesh = None
+        self._n = int(next(iter(self._arrays.values())).shape[0])
+        self._stats_chunk = max(1, int(stats_chunk))
+        self._finish = jax.jit(self._finish_impl)
+        self._finish_queued = jax.jit(self._finish_queued_impl)
+        self._prefetcher: CohortPrefetcher | None = None
+        self._uploaded_nbytes = 0        # most recent cohort's device bytes
+        # one streaming pass at open time: sizes + histograms + entropy
+        self._hists: dict = {}
+        self._sizes, self._hists[None], self._entropy = self._stream_stats()
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def from_stacked(cls, data, *, transform: Normalize | None = None
+                     ) -> "HostCorpus":
+        """Wrap a stacked dict / either corpus; identity on a HostCorpus."""
+        if isinstance(data, HostCorpus):
+            return data
+        if isinstance(data, ClientCorpus):
+            return cls(data.as_numpy(), transform=data.transform
+                       if transform is None else transform)
+        return cls(dict(data), transform=transform)
+
+    @classmethod
+    def from_parts(cls, x, y, parts, *, batch_multiple: int = 1,
+                   transform: Normalize | None = None) -> "HostCorpus":
+        from .partition import stack_clients
+        return cls(stack_clients(x, y, parts, batch_multiple),
+                   transform=transform)
+
+    # ------------------------------------------------------ mmap open/save
+    def save(self, directory: str) -> str:
+        """Write each array as ``<directory>/<key>.npy`` plus a meta.json
+        (transform policy included), the layout :meth:`open` memory-maps.
+        Returns ``directory``."""
+        os.makedirs(directory, exist_ok=True)
+        for k, v in self._arrays.items():
+            np.save(os.path.join(directory, f"{k}.npy"), v)
+        meta = {"keys": sorted(self._arrays)}
+        if self.transform is not None:
+            t = self.transform
+            meta["transform"] = {"scale": t.scale, "mean": list(t.mean),
+                                 "std": list(t.std)}
+        with open(os.path.join(directory, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        return directory
+
+    @classmethod
+    def open(cls, directory: str, *,
+             transform: Normalize | None = None) -> "HostCorpus":
+        """Memory-map a :meth:`save` layout (``np.load(mmap_mode="r")``):
+        opening N=10^6 clients touches pages only as cohorts gather them.
+        ``transform=None`` restores the saved policy, if any."""
+        meta_path = os.path.join(directory, "meta.json")
+        with open(meta_path) as f:
+            meta = json.load(f)
+        arrays = {k: np.load(os.path.join(directory, f"{k}.npy"),
+                             mmap_mode="r") for k in meta["keys"]}
+        if transform is None and "transform" in meta:
+            t = meta["transform"]
+            transform = Normalize(scale=t["scale"], mean=tuple(t["mean"]),
+                                  std=tuple(t["std"]))
+        return cls(arrays, transform=transform)
+
+    # ---------------------------------------------------- Mapping protocol
+    def __getitem__(self, key):
+        return self._arrays[key]
+
+    def __iter__(self):
+        return iter(self._arrays)
+
+    def __len__(self):
+        return len(self._arrays)
+
+    # ----------------------------------------------------------- metadata
+    @property
+    def num_clients(self) -> int:
+        return self._n
+
+    @property
+    def padded_num_clients(self) -> int:
+        """The streaming plane never pads: cohorts, not the corpus, meet
+        the mesh (``make_sharded_client_fn`` pads the cohort in-trace)."""
+        return self._n
+
+    @property
+    def client_valid(self) -> np.ndarray:
+        return np.ones(self._n, bool)
+
+    @property
+    def samples_per_client(self) -> int:
+        return int(self._arrays["y"].shape[1]) if "y" in self._arrays \
+            else int(next(iter(self._arrays.values())).shape[1])
+
+    def signature(self) -> tuple:
+        """Hashable key carrying the *plane* plus shapes/dtypes/transform:
+        a compiled program built against the streaming plane must never be
+        served to a resident corpus or vice versa."""
+        return ("stream",
+                tuple((k, tuple(v.shape), str(v.dtype))
+                      for k, v in sorted(self._arrays.items())),
+                self.transform)
+
+    @property
+    def nbytes(self) -> int:
+        """Host-resident (or host-mapped) bytes of the stored corpus."""
+        return int(sum(int(v.size) * v.dtype.itemsize
+                       for v in self._arrays.values()))
+
+    def device_nbytes(self) -> int:
+        """Device bytes the plane currently holds: the most recent staged
+        cohort (plus any in-flight prefetch) — O(|S_t|), never O(N)."""
+        inflight = (self._prefetcher.inflight_nbytes
+                    if self._prefetcher is not None else 0)
+        return int(self._uploaded_nbytes + inflight)
+
+    def cohort_nbytes(self, m: int) -> int:
+        """Bytes a float32 host-slice plane would ship per round for an
+        ``m``-client cohort (same accounting as the resident plane)."""
+        total = 0
+        for k, v in self._arrays.items():
+            itemsize = (4 if k == "x" and self.transform is not None
+                        else v.dtype.itemsize)
+            total += int(np.prod(v.shape[1:], dtype=np.int64)) * itemsize * m
+        return total
+
+    def as_numpy(self) -> dict:
+        return {k: np.asarray(v) for k, v in self._arrays.items()}
+
+    def memory_report(self) -> dict:
+        """Plane-aware byte accounting (the satellite contract):
+        host-mapped bytes, device-resident bytes, staging-buffer bytes."""
+        pf = self._prefetcher
+        return {
+            "plane": self.plane,
+            "host_mapped_bytes": self.nbytes,
+            "host_is_mmap": any(isinstance(v, np.memmap)
+                                for v in self._arrays.values()),
+            "device_resident_bytes": self.device_nbytes(),
+            "staging_nbytes": 0 if pf is None else pf.staging_nbytes,
+            "num_clients": self._n,
+        }
+
+    # ------------------------------------------------- control-plane stats
+    def _stream_stats(self):
+        """One pass over client chunks: per-client sizes, label histograms
+        (inferred global class width), and label entropy.
+
+        Each chunk runs the identical per-row math the dense plane runs
+        (``core.pools.label_histograms`` / ``hist_entropy``; row-local
+        float32 weight sums), so the streamed results are bit-for-bit the
+        dense results at any N — the plane-equivalence property the tests
+        hold.
+        """
+        from ..core.pools import hist_entropy, label_histograms
+        y = self._arrays.get("y")
+        w = self._arrays.get("w")
+        sizes = np.empty(self._n, np.int64)
+        chunks: list[np.ndarray] = []
+        width = 0
+        for lo in range(0, self._n, self._stats_chunk):
+            hi = min(lo + self._stats_chunk, self._n)
+            wc = None if w is None else np.asarray(w[lo:hi])
+            if wc is None:
+                sizes[lo:hi] = self.samples_per_client
+            else:
+                # row-local float32 sums: exactly the resident plane's
+                # jnp.sum(w, axis=1) for the 0/1 masks stack_clients emits
+                sizes[lo:hi] = np.sum(
+                    wc.astype(np.float32), axis=1).astype(np.int64)
+            if y is not None:
+                h = label_histograms(np.asarray(y[lo:hi]), wc)
+                width = max(width, h.shape[1])
+                chunks.append(h)
+        if y is None:
+            return sizes, None, np.zeros(self._n, np.float64)
+        hists = np.zeros((self._n, width), np.float64)
+        lo = 0
+        for h in chunks:
+            hists[lo:lo + h.shape[0], :h.shape[1]] = h
+            lo += h.shape[0]
+        ent = np.asarray([hist_entropy(h) for h in hists], np.float64)
+        return sizes, hists, ent
+
+    def sizes(self) -> np.ndarray:
+        return self._sizes
+
+    def label_histograms(self, num_classes: int | None = None) -> np.ndarray:
+        """(N, C) weighted label counts, streamed; the default width was
+        computed at open time, explicit widths stream a fresh pass (cached
+        per ``num_classes``, like the resident plane)."""
+        if num_classes not in self._hists:
+            from ..core.pools import label_histograms
+            y, w = self._arrays["y"], self._arrays.get("w")
+            rows = []
+            for lo in range(0, self._n, self._stats_chunk):
+                hi = min(lo + self._stats_chunk, self._n)
+                rows.append(label_histograms(
+                    np.asarray(y[lo:hi]),
+                    None if w is None else np.asarray(w[lo:hi]),
+                    num_classes=num_classes))
+            self._hists[num_classes] = np.concatenate(rows, axis=0)
+        return self._hists[num_classes]
+
+    def label_entropy(self) -> np.ndarray:
+        return self._entropy
+
+    # ------------------------------------------------------------ placement
+    def shard(self, mesh, axis: str = CLIENT_AXIS) -> "HostCorpus":
+        """Record the mesh cohort uploads replicate over. The corpus
+        itself never moves — streaming *is* the placement. Returns self
+        (same idempotent contract as the resident plane)."""
+        self._mesh = mesh
+        return self
+
+    def _place(self, v: np.ndarray) -> jax.Array:
+        if self._mesh is None:
+            return jnp.asarray(v)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(v, NamedSharding(self._mesh, P()))
+
+    # ------------------------------------------------------------ data plane
+    def prefetcher(self) -> "CohortPrefetcher":
+        """The (lazily created) background prefetcher; :meth:`prefetch`
+        and :meth:`cohort` route through it."""
+        if self._prefetcher is None:
+            self._prefetcher = CohortPrefetcher(self)
+        return self._prefetcher
+
+    def prefetch(self, idx, active=None) -> None:
+        """Start staging cohort ``idx`` (host gather + H2D) on the
+        background thread. A later :meth:`cohort` with the same (idx,
+        active) consumes the staged upload; :meth:`cancel_prefetch`
+        discards it (selector misprediction)."""
+        self.prefetcher().start(np.asarray(idx, np.int64),
+                                None if active is None
+                                else np.asarray(active, np.int64))
+
+    def cancel_prefetch(self) -> None:
+        if self._prefetcher is not None:
+            self._prefetcher.cancel()
+
+    def prefetch_stats(self) -> dict:
+        return (CohortPrefetcher.empty_stats() if self._prefetcher is None
+                else self._prefetcher.stats())
+
+    def _gather_host(self, idx: np.ndarray) -> dict:
+        """Host fancy-gather of the cohort rows, storage dtype (memory
+        maps touch only the selected pages)."""
+        return {k: np.asarray(v[idx]) for k, v in self._arrays.items()}
+
+    def _upload(self, staged: dict) -> dict:
+        up = {k: self._place(v) for k, v in staged.items()}
+        self._uploaded_nbytes = sum(int(v.size) * v.dtype.itemsize
+                                    for v in up.values())
+        return up
+
+    def _finish_impl(self, data: dict) -> dict:
+        out = dict(data)
+        if self.transform is not None and "x" in out:
+            out["x"] = self.transform(out["x"])
+        return out
+
+    def _finish_queued_impl(self, data: dict, active: jax.Array) -> dict:
+        out = self._finish_impl(data)
+        if "w" in out:
+            s = out["w"].shape[1]
+            live = jnp.arange(s)[None, :] < active[:, None]
+            out["w"] = out["w"] * live.astype(out["w"].dtype)
+        return out
+
+    def cohort(self, idx, active=None) -> dict:
+        """Gather clients ``idx``: staged upload if a matching prefetch is
+        in flight, else a synchronous host gather + upload; either way the
+        dtype transform and queue mask run in the same traced program the
+        resident plane fuses into its gather — so cohorts are bit-for-bit
+        across planes."""
+        idx = np.asarray(idx, np.int64)
+        act = None if active is None else np.asarray(active, np.int64)
+        staged = None
+        if self._prefetcher is not None:
+            staged = self._prefetcher.take(idx, act)
+        if staged is None:
+            staged = self._upload(self._gather_host(idx))
+        else:
+            self._uploaded_nbytes = sum(int(v.size) * v.dtype.itemsize
+                                        for v in staged.values())
+        if act is None:
+            return self._finish(staged)
+        return self._finish_queued(staged,
+                                   self._place(act.astype(np.int32)))
+
+
+def _key(idx: np.ndarray, active: np.ndarray | None) -> tuple:
+    return (idx.tobytes(), None if active is None else active.tobytes())
+
+
+class CohortPrefetcher:
+    """Double-buffered background staging of the next cohort's upload.
+
+    ``start(idx, active)`` hands the *predicted* next selection to a
+    daemon thread that gathers the rows into one of two reusable host
+    staging buffers (double-buffering: the buffer an in-flight upload
+    reads is never the one the next prefetch writes) and ships them to
+    the device with ``jax.device_put``. ``take(idx, active)`` consumes a
+    matching staged upload (hit), returns ``None`` on no/other pending
+    work (the caller gathers synchronously), and ``cancel()`` discards a
+    misprediction. Counters record hits / misses / cancels plus staging
+    vs blocked time, so the benchmark can report the hit rate and the
+    wall-clock the overlap actually hid.
+    """
+
+    def __init__(self, corpus: HostCorpus):
+        self._corpus = corpus
+        self._lock = threading.Lock()
+        self._pending = None      # (key, event, holder)
+        self._buffers: list[dict | None] = [None, None]
+        self._flip = 0
+        self.hits = 0
+        self.misses = 0
+        self.cancelled = 0
+        self.stage_s = 0.0        # background gather+upload time
+        self.wait_s = 0.0         # main-thread time blocked in take()
+
+    @staticmethod
+    def empty_stats() -> dict:
+        return {"hits": 0, "misses": 0, "cancelled": 0, "hit_rate": 0.0,
+                "stage_s": 0.0, "wait_s": 0.0, "overlap_s": 0.0}
+
+    @property
+    def staging_nbytes(self) -> int:
+        return sum(sum(v.nbytes for v in b.values())
+                   for b in self._buffers if b is not None)
+
+    @property
+    def inflight_nbytes(self) -> int:
+        with self._lock:
+            if self._pending is None:
+                return 0
+            holder = self._pending[2]
+            staged = holder.get("staged")
+        if staged is None:
+            return 0
+        return sum(int(v.size) * v.dtype.itemsize for v in staged.values())
+
+    # ------------------------------------------------------------ staging
+    def _staging_buffer(self, idx: np.ndarray) -> dict:
+        """The next staging buffer, (re)allocated to the cohort shape.
+        Preallocated and reused — the host-pinned-buffer analog on
+        backends without explicit pinning."""
+        m = len(idx)
+        self._flip ^= 1
+        buf = self._buffers[self._flip]
+        shapes = {k: (m,) + v.shape[1:]
+                  for k, v in self._corpus._arrays.items()}
+        if buf is None or any(buf[k].shape != shapes[k] or
+                              buf[k].dtype != v.dtype
+                              for k, v in self._corpus._arrays.items()):
+            buf = {k: np.empty(shapes[k], v.dtype)
+                   for k, v in self._corpus._arrays.items()}
+            self._buffers[self._flip] = buf
+        return buf
+
+    def _stage(self, idx: np.ndarray, buf: dict, holder: dict,
+               done: threading.Event) -> None:
+        try:
+            t0 = time.perf_counter()
+            for k, v in self._corpus._arrays.items():
+                np.take(v, idx, axis=0, out=buf[k])
+            holder["staged"] = self._corpus._upload(buf)
+            holder["stage_s"] = time.perf_counter() - t0
+        except BaseException as e:  # surfaced to the consuming thread
+            holder["error"] = e
+        finally:
+            done.set()
+
+    def start(self, idx: np.ndarray, active: np.ndarray | None) -> None:
+        with self._lock:
+            if self._pending is not None:      # overwrite: old prediction
+                self.cancelled += 1            # is dead either way
+            done = threading.Event()
+            holder: dict = {}
+            self._pending = (_key(idx, active), done, holder)
+        buf = self._staging_buffer(idx)
+        threading.Thread(target=self._stage, args=(idx, buf, holder, done),
+                         daemon=True).start()
+
+    # ----------------------------------------------------------- consuming
+    def take(self, idx: np.ndarray, active: np.ndarray | None):
+        with self._lock:
+            pending = self._pending
+            if pending is None:
+                return None
+            if pending[0] != _key(idx, active):
+                self._pending = None
+                self.misses += 1
+                return None
+            self._pending = None
+        _, done, holder = pending
+        t0 = time.perf_counter()
+        done.wait()
+        self.wait_s += time.perf_counter() - t0
+        if "error" in holder:
+            raise holder["error"]
+        self.hits += 1
+        self.stage_s += holder.get("stage_s", 0.0)
+        return holder["staged"]
+
+    def cancel(self) -> None:
+        with self._lock:
+            if self._pending is not None:
+                self._pending = None
+                self.cancelled += 1
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses + self.cancelled
+        return {"hits": self.hits, "misses": self.misses,
+                "cancelled": self.cancelled,
+                "hit_rate": self.hits / max(total, 1),
+                "stage_s": self.stage_s, "wait_s": self.wait_s,
+                # staging time the main thread did NOT spend blocked:
+                # the latency the prefetch overlap actually hid
+                "overlap_s": max(self.stage_s - self.wait_s, 0.0)}
+
+
+# ---------------------------------------------------------- plane wiring
+
+def plane_of(corpus) -> str:
+    """"resident" | "streaming" for a constructed corpus of either plane."""
+    return getattr(corpus, "plane", "resident")
+
+
+def estimate_nbytes(data) -> int:
+    """Storage-dtype bytes of a stacked dict / either corpus (the "auto"
+    residency decision input)."""
+    if isinstance(data, (ClientCorpus, HostCorpus)):
+        return data.nbytes
+    return int(sum(np.asarray(v).size * np.asarray(v).dtype.itemsize
+                   for v in dict(data).values()))
+
+
+def as_data_plane(client_data, plane: str = "auto", *,
+                  transform: Normalize | None = None,
+                  resident_budget: int = RESIDENT_BUDGET_BYTES):
+    """Resolve ``client_data`` onto a data plane — THE wiring point
+    ``repro.fl.build`` / ``Server`` / ``launch.train --data-plane`` share.
+
+    ``"resident"`` → :class:`ClientCorpus` (device-resident, the fast
+    path when N fits), ``"streaming"`` → :class:`HostCorpus`, ``"auto"``
+    → an already-constructed corpus passes through on its own plane; a
+    stacked dict goes resident while its storage bytes fit
+    ``resident_budget`` and streams past it. Explicit planes *convert*
+    a corpus of the other plane (host round-trip) rather than refuse.
+    """
+    if plane not in PLANES:
+        raise ValueError(
+            f"unknown data plane {plane!r}; expected one of {PLANES}")
+    if plane == "auto":
+        if isinstance(client_data, (ClientCorpus, HostCorpus)):
+            return client_data
+        plane = ("resident"
+                 if estimate_nbytes(client_data) <= resident_budget
+                 else "streaming")
+    if plane == "resident":
+        if isinstance(client_data, HostCorpus):
+            return ClientCorpus(client_data.as_numpy(),
+                                transform=client_data.transform
+                                if transform is None else transform)
+        return ClientCorpus.from_stacked(client_data, transform=transform)
+    return HostCorpus.from_stacked(client_data, transform=transform)

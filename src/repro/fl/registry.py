@@ -77,7 +77,7 @@ def _instantiate(kind: str, spec: Any, config, local):
 
 def build(name: str, apply_fn, init_params, client_data, config,
           local=None, *, selector=None, strategy=None, judge=None,
-          aggregator=None, engine=None, runtime=None):
+          aggregator=None, engine=None, runtime=None, data_plane="auto"):
     """Construct a server (an *engine*) from a composition name.
 
     ``selector``/``strategy``/``judge``/``aggregator`` override individual
@@ -104,6 +104,14 @@ def build(name: str, apply_fn, init_params, client_data, config,
               runtime=RuntimeConfig(speculate=True, spec_backend="pallas"))
         build("fedentropy", ..., engine="async",
               runtime=AsyncConfig(clock="straggler", staleness_alpha=0.5))
+
+    ``data_plane`` picks where ``client_data`` lives
+    (:func:`repro.data.stream.as_data_plane`): ``"resident"`` stacks it
+    on device (:class:`repro.data.corpus.ClientCorpus`), ``"streaming"``
+    keeps it host-side with per-cohort upload + speculative prefetch
+    (:class:`repro.data.stream.HostCorpus`), ``"auto"`` (default) keeps
+    the resident fast path while the corpus fits and passes constructed
+    corpora through on their own plane.
     """
     from ..core.strategies import LocalSpec
     from . import runtime as _runtime  # registers engines
@@ -141,6 +149,8 @@ def build(name: str, apply_fn, init_params, client_data, config,
     kwargs = {}
     if runtime is not None:
         kwargs["runtime"] = runtime
+    if data_plane != "auto":
+        kwargs["data_plane"] = data_plane
     return engine_cls(
         apply_fn, init_params, client_data, config,
         selector=_instantiate("selector", selector or comp.selector,

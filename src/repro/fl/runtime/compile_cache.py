@@ -21,8 +21,9 @@ Usage::
 The per-server cache stays the default because process-level sharing keys
 on apply_fn identity: callers that rebuild closures per server get no
 sharing (each closure is its own key); callers that hold one apply_fn get
-full sharing. Nothing here is thread-safe — FL round loops are host-serial
-by design.
+full sharing. Both caches are thread-safe (they share ``BoundedJitCache``'s
+RLock): the streaming data plane's cohort prefetcher runs on a background
+thread, so round loops are no longer guaranteed host-serial.
 """
 from __future__ import annotations
 
@@ -40,12 +41,15 @@ class ProcessCompileCache(BoundedJitCache):
         self.misses = 0
 
     def get(self, key: Any, make: Callable[[], Any]):
-        hit = key in self._entries
-        fn = super().get(key, make)
-        if hit:
-            self.hits += 1
-        else:
-            self.misses += 1
+        # hit probe + insert under the (reentrant) cache lock, so two
+        # threads racing the same key count one miss and build once
+        with self._lock:
+            hit = key in self._entries
+            fn = super().get(key, make)
+            if hit:
+                self.hits += 1
+            else:
+                self.misses += 1
         return fn
 
     def stats(self) -> dict:
@@ -66,9 +70,10 @@ def enable_process_cache(maxsize: int = 32) -> ProcessCompileCache:
     if _PROCESS_CACHE is None:
         _PROCESS_CACHE = ProcessCompileCache(maxsize)
     else:
-        _PROCESS_CACHE.maxsize = max(1, int(maxsize))
-        while len(_PROCESS_CACHE._entries) > _PROCESS_CACHE.maxsize:
-            _PROCESS_CACHE._entries.popitem(last=False)
+        with _PROCESS_CACHE._lock:
+            _PROCESS_CACHE.maxsize = max(1, int(maxsize))
+            while len(_PROCESS_CACHE._entries) > _PROCESS_CACHE.maxsize:
+                _PROCESS_CACHE._entries.popitem(last=False)
     return _PROCESS_CACHE
 
 

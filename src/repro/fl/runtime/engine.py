@@ -29,6 +29,17 @@ On a mismatch the speculated buffers are discarded and round t+1
 re-dispatches from the oracle verdict — history records ``spec_hit`` per
 round and ``redispatched`` on rounds whose compute was re-issued.
 
+On the *streaming* data plane (:class:`repro.data.stream.HostCorpus`)
+the same speculated selection doubles as the **prefetch target**: rather
+than dispatching round t+1 eagerly (its host gather + H2D upload would
+block the round loop), the engine hands the predicted cohort to the
+corpus's background :class:`~repro.data.stream.CohortPrefetcher` and
+dispatches only after the oracle confirms — the upload overlaps the
+oracle's own device sync, and a misprediction cancels the staged buffers
+with no wasted compute. Histories stay bit-for-bit: the dispatch runs
+the identical programs on the identical inputs either side of the
+oracle.
+
 History and parameters are bit-for-bit identical to the sequential
 ``Server`` in BOTH modes: recorded verdicts/entropy always come from the
 float64 oracle, the selector's RNG stream advances exactly as it would
@@ -222,7 +233,24 @@ class PipelinedServer(Server):
         # group assignment rides with the dispatch: sel_copy made (and, for
         # chain strategies, grouped) this selection, so it is the selector
         # the cohort layout is read from
-        next_out = self._dispatch(next_sel, sel_copy, new_global_spec)
+        prefetch = getattr(self.corpus, "prefetch", None)
+        if prefetch is None:
+            next_out = self._dispatch(next_sel, sel_copy, new_global_spec)
+        else:
+            # streaming plane: a dispatch here would block THIS thread on
+            # the host gather + H2D upload of round t+1's cohort. Stage it
+            # on the prefetch thread instead, so the upload overlaps the
+            # oracle's block on round t's soft labels below; the dispatch
+            # itself waits for the verdict (on a hit the gathered cohort
+            # is already staged — on a miss nothing was computed against
+            # the wrong selection and only the staged buffers are thrown
+            # away). The schedule read is idempotent (`data_schedule`
+            # returns the counts fixed at select time), so the dispatch's
+            # own read below sees bit-identical counts.
+            sched = getattr(sel_copy, "data_schedule", None)
+            prefetch(np.asarray(next_sel),
+                     None if sched is None else sched(next_sel))
+            next_out = None
 
         # --- float64 oracle on host, overlapping the in-flight compute ---
         soft = np.asarray(out["soft_label"], np.float64)
@@ -235,8 +263,18 @@ class PipelinedServer(Server):
         if hit:
             self.global_params = new_global_spec
             self.selector = sel_copy          # same verdict -> same stream
+            if next_out is None:
+                # streaming plane: the cohort upload was prefetched above;
+                # this dispatch consumes the staged buffers (a hit in the
+                # prefetcher) instead of gathering synchronously
+                next_out = self._dispatch(next_sel, sel_copy,
+                                          new_global_spec)
             self._pending = (next_sel, next_out)
         else:                                  # discard, redo from oracle
+            if prefetch is not None:
+                # selector misprediction: drop the staged cohort — the
+                # re-selected round t+1 falls back to a synchronous gather
+                self.corpus.cancel_prefetch()
             self.global_params = self.aggregator(
                 self.global_params, out,
                 jnp.asarray(sizes, jnp.float32), jnp.asarray(mask))

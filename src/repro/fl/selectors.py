@@ -22,7 +22,10 @@
                       applies inside the cohort gather.
 
 Selectors that consume corpus statistics implement ``bind_data`` — the
-server passes its :class:`repro.data.corpus.ClientCorpus`, whose cached
+server passes its data plane (device-resident
+:class:`repro.data.corpus.ClientCorpus` or streaming
+:class:`repro.data.stream.HostCorpus`; the stats surface is duck-typed,
+so either plane binds transparently), whose cached
 ``label_histograms()``/``sizes()`` replace the per-selector recompute
 (a raw stacked dict still binds, for direct construction in tests).
 """
@@ -35,14 +38,16 @@ import numpy as np
 from ..core.pools import (
     DevicePools, greedy_entropy_groups, hist_entropy, label_histograms,
 )
-from ..data.corpus import ClientCorpus, DataQueue
+from ..data.corpus import DataQueue
 from .registry import register
 
 
 def _corpus_histograms(client_data) -> np.ndarray:
-    """Label histograms from a ClientCorpus (cached) or a stacked dict."""
-    if isinstance(client_data, ClientCorpus):
-        return client_data.label_histograms()
+    """Label histograms from either corpus plane (cached, duck-typed) or
+    a raw stacked dict."""
+    cached = getattr(client_data, "label_histograms", None)
+    if cached is not None:
+        return cached()
     return label_histograms(np.asarray(client_data["y"]),
                             np.asarray(client_data["w"])
                             if "w" in client_data else None)
@@ -139,7 +144,7 @@ class CatGrouper:
 
     def bind_data(self, client_data) -> None:
         """Record per-device label histograms (corpus-cached when bound
-        to a ClientCorpus, recomputed for a raw stacked dict)."""
+        to a corpus of either plane, recomputed for a raw dict)."""
         self._hists = _corpus_histograms(client_data)
 
     def select(self, num: int) -> list[int]:
@@ -216,8 +221,9 @@ class QueueSelector:
         return cls(config.num_clients, config.eps, config.seed)
 
     def bind_data(self, client_data) -> None:
-        """Pull per-client entropy ranks + real sizes off the corpus."""
-        if isinstance(client_data, ClientCorpus):
+        """Pull per-client entropy ranks + real sizes off the corpus
+        (either plane — the stats surface is duck-typed)."""
+        if hasattr(client_data, "label_entropy"):
             self._entropy = client_data.label_entropy()
             self._sizes = client_data.sizes()
         else:

@@ -7,14 +7,17 @@ judgment, pool bookkeeping) is host-side numpy — exactly the split the
 legacy ``FedEntropyTrainer`` used, so fixed-seed round histories are
 bit-for-bit reproducible.
 
-Client data lives in a device-resident
-:class:`repro.data.corpus.ClientCorpus` (a plain stacked dict is wrapped
-on construction): the per-round cohort is a jitted on-device gather
-(``corpus.cohort(idx)``) rather than a host slice + full-cohort
-host→device copy, the corpus keeps its storage dtype (uint8 ingest
-normalizes inside the traced gather), and selectors draw their
-control-plane stats (label histograms, sizes) off the corpus instead of
-recomputing them. Selectors exposing ``data_schedule(sel)`` (the
+Client data lives on a *data plane* (``data_plane=`` keyword, resolved by
+:func:`repro.data.stream.as_data_plane`): device-resident
+:class:`repro.data.corpus.ClientCorpus` by default (a plain stacked dict
+is wrapped on construction), or the host-resident streaming
+:class:`repro.data.stream.HostCorpus` when N doesn't fit. Either way the
+per-round cohort reaches the device via ``corpus.cohort(idx)`` — a jitted
+on-device gather (resident) or a host gather + single-cohort upload
+(streaming) — the corpus keeps its storage dtype (uint8 ingest normalizes
+inside the traced finish), and selectors draw their control-plane stats
+(label histograms, sizes) off the corpus instead of recomputing them.
+Selectors exposing ``data_schedule(sel)`` (the
 dynamic-data-queue selector) have their per-client release counts
 applied as a weight mask inside the same gather.
 
@@ -25,6 +28,7 @@ XLA executables for the lifetime of the process.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Callable
@@ -35,7 +39,7 @@ import numpy as np
 
 from ..core.aggregation import comm_bytes
 from ..core.strategies import ApplyFn, client_update, cross_entropy
-from ..data.corpus import ClientCorpus
+from ..data.stream import as_data_plane
 from .protocols import Aggregator, ClientStrategy, Judge, Selector
 
 
@@ -51,24 +55,32 @@ class ServerConfig:
 
 
 class BoundedJitCache:
-    """Tiny LRU for compiled programs, owned by one ``Server``."""
+    """Tiny LRU for compiled programs, owned by one ``Server``.
+
+    Lookups/insertions hold an RLock: the streaming data plane's cohort
+    prefetcher runs on a background thread, so cache access is no longer
+    guaranteed host-serial.
+    """
 
     def __init__(self, maxsize: int):
         self.maxsize = max(1, int(maxsize))
         self._entries: OrderedDict[Any, Any] = OrderedDict()
+        self._lock = threading.RLock()
 
     def get(self, key, make: Callable[[], Any]):
-        if key in self._entries:
-            self._entries.move_to_end(key)
-            return self._entries[key]
-        fn = make()
-        self._entries[key] = fn
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
-        return fn
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                return self._entries[key]
+            fn = make()
+            self._entries[key] = fn
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+            return fn
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
 
 def _make_client_fn(apply_fn: ApplyFn, spec, in_axes):
@@ -103,13 +115,15 @@ class Server:
         strategy: ClientStrategy,
         judge: Judge,
         aggregator: Aggregator,
+        data_plane: str = "auto",
     ):
         self.apply_fn = apply_fn
         self.global_params = init_params
-        # the data plane: device-resident, storage-dtype, gather-on-device
-        # (a plain stacked dict is wrapped; ClientCorpus is a Mapping, so
-        # `self.data` keeps its seed-era dict-like surface)
-        self.corpus = ClientCorpus.from_stacked(client_data)
+        # the data plane: device-resident (fast path) or host-resident
+        # streaming, per `data_plane` — an already-constructed corpus of
+        # either plane passes through under "auto". Both planes are
+        # Mappings, so `self.data` keeps its seed-era dict-like surface.
+        self.corpus = as_data_plane(client_data, data_plane)
         self.data = self.corpus
         self.config = config
         self.selector = selector
@@ -167,9 +181,12 @@ class Server:
     def _run_cohort(self, sel, selector, global_params=None):
         """Gather, lay out, and launch the cohort's client compute (async).
 
-        The cohort is a jitted on-device gather along the corpus's client
-        axis — only ``idx`` (and a data-queue schedule, if the selector
-        has one) cross the host→device boundary. Group-aware strategies
+        The cohort comes off the data plane — a jitted on-device gather
+        along the resident corpus's client axis (only ``idx`` and a
+        data-queue schedule, if the selector has one, cross the
+        host→device boundary), or a host gather + cohort-sized upload on
+        the streaming plane (which may consume a prefetched staging).
+        Group-aware strategies
         (``prepare_round``) re-lay the gathered cohort into chain groups
         read off ``selector`` — the selector that produced ``sel``, which
         under speculation may be a throwaway copy: the group, not the

@@ -179,7 +179,19 @@ def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
         fl.LocalSpec(epochs=args.local_epochs, lr=args.lr,
                      batch_size=args.per_client_batch),
         selector=selector, judge=judge,
-        engine=args.engine, runtime=runtime)
+        engine=args.engine, runtime=runtime, data_plane=args.data_plane)
+    if args.dryrun:
+        rep = server.corpus.memory_report()
+        m = max(1, int(round(config.num_clients * config.participation)))
+        print(f"dryrun: engine={args.engine} data_plane={rep['plane']}")
+        print(f"  host-mapped bytes:     {rep['host_mapped_bytes']}"
+              f" (mmap={rep['host_is_mmap']})")
+        print(f"  device-resident bytes: {rep['device_resident_bytes']}")
+        print(f"  staging bytes:         {rep['staging_nbytes']}")
+        print(f"  clients: N={rep['num_clients']} cohort |S_t|={m} "
+              f"(~{server.corpus.cohort_nbytes(m)}B/round host-slice "
+              "equivalent)")
+        return
     t0 = time.time()
     for it in range(args.steps):
         rec = server.round()
@@ -315,6 +327,17 @@ def main() -> None:
     ap.add_argument("--speculate", action="store_true",
                     help="pipelined engine: overlap oracle judgment with "
                          "the next round's client compute")
+    ap.add_argument("--data-plane", default="auto",
+                    choices=["resident", "streaming", "auto"],
+                    help="server engines: where client data lives — "
+                         "resident stacks all N clients on device, "
+                         "streaming keeps them host-side and uploads "
+                         "only the cohort (prefetched under --speculate),"
+                         " auto picks resident while N fits")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="server engines: build the server, print the "
+                         "data-plane memory report, and exit without "
+                         "training")
     ap.add_argument("--local-epochs", type=int, default=1,
                     help="E local epochs (server engines)")
     ap.add_argument("--samples-per-client", type=int, default=16,
@@ -334,6 +357,14 @@ def main() -> None:
     corpus, client_idx = build_fl_corpus(
         cfg, args.logical_clients, args.case, args.seq_len, args.seed)
     if args.engine == "mesh":
+        if args.data_plane != "auto" or args.dryrun:
+            # the mesh engine feeds token batches straight into the jitted
+            # step — there is no corpus object to place on a plane or to
+            # report memory for
+            raise SystemExit(
+                "--data-plane/--dryrun need a weights-level engine: use "
+                "--engine sequential, pipelined, or async (the server "
+                "owns the data-plane corpus)")
         if args.selector == "queue":
             # the mesh engine has no ClientCorpus to bind entropy stats or
             # data-queue schedules to — it would silently run uniform

@@ -1,0 +1,508 @@
+"""The streaming host-resident data plane (`repro.data.stream`).
+
+Plane equivalence is the contract under test: `HostCorpus` streamed
+control-plane stats match `ClientCorpus` dense stats bit-exactly,
+cohorts are bit-equal across planes (memory-mapped stores included),
+and streaming-plane Server / PipelinedServer histories reproduce the
+recorded goldens bit-for-bit with speculation on and off — where the
+speculated selection doubles as the `CohortPrefetcher` target and a
+misprediction falls back to a synchronous gather. Also covered: the
+thread-safe jit caches the prefetch thread requires, the packed `.npy`
+ingest cache, and plane-aware memory accounting.
+"""
+import json
+import os
+import pickle
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.data.corpus import ClientCorpus, DataQueue, Normalize
+from repro.data.ingest import load_image_corpus, packed_cache_dir
+from repro.data.partition import partition, stack_clients
+from repro.data.stream import HostCorpus, as_data_plane
+from repro.data.synthetic import make_image_dataset
+from repro.fl.runtime import RuntimeConfig
+from repro.fl.runtime.compile_cache import (
+    disable_process_cache, enable_process_cache,
+)
+from repro.fl.server import BoundedJitCache
+from repro.models import cnn
+
+SEED_GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                           "seed_history.json")
+UNEVEN_GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                             "uneven_history.json")
+PAPER_N, CLASSES = 100, 10
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """Identical to the setup the golden histories were recorded with."""
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=4, train_per_class=60, test_per_class=15, hw=16,
+        noise=0.4, seed=0)
+    parts = partition("case1", ytr, 8, 4, seed=0)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=20)
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=16, num_classes=4)
+    return data, params
+
+
+@pytest.fixture(scope="module")
+def paper():
+    """Identical to the setup tests/golden/record_uneven.py recorded."""
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=CLASSES, train_per_class=2 * PAPER_N, test_per_class=10,
+        hw=16, noise=0.9, seed=0)
+    parts = partition("case1", ytr, PAPER_N, CLASSES, seed=0)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=10)
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=16,
+                      num_classes=CLASSES)
+    return data, params
+
+
+# ------------------------------------------------- streamed stats parity
+
+def test_streamed_stats_match_dense_bit_exactly(tiny):
+    """One-pass chunked stats == dense corpus stats, bit for bit — with a
+    chunk size small enough that chunking actually happens."""
+    data, _ = tiny
+    dense = ClientCorpus.from_stacked(dict(data))
+    streamed = HostCorpus(dict(data), stats_chunk=3)     # 8 clients -> 3
+    np.testing.assert_array_equal(streamed.sizes(), dense.sizes())
+    np.testing.assert_array_equal(streamed.label_histograms(),
+                                  dense.label_histograms())
+    np.testing.assert_array_equal(streamed.label_entropy(),
+                                  dense.label_entropy())
+    # explicit class width streams a fresh (cached) pass
+    np.testing.assert_array_equal(streamed.label_histograms(7),
+                                  dense.label_histograms(7))
+    assert streamed.label_histograms(7) is streamed.label_histograms(7)
+
+
+def test_streamed_stats_match_dense_paper_scale(paper):
+    data, _ = paper
+    dense = ClientCorpus.from_stacked(dict(data))
+    streamed = HostCorpus(dict(data), stats_chunk=7)     # N=100 -> chunks
+    np.testing.assert_array_equal(streamed.sizes(), dense.sizes())
+    np.testing.assert_array_equal(streamed.label_histograms(),
+                                  dense.label_histograms())
+    np.testing.assert_array_equal(streamed.label_entropy(),
+                                  dense.label_entropy())
+
+
+# ---------------------------------------------------- cohort equivalence
+
+def test_cohort_bit_equal_across_planes(tiny):
+    """Host gather + upload + traced finish == resident jitted gather,
+    with and without a queue mask, transform included."""
+    data, _ = tiny
+    t = Normalize(scale=1 / 255.0, mean=(0.4, 0.5, 0.6),
+                  std=(0.2, 0.3, 0.4))
+    dense = ClientCorpus(dict(data), transform=t)
+    streamed = HostCorpus(dict(data), transform=t)
+    idx = np.asarray([5, 0, 3, 3])
+    active = np.asarray([7, 1, 20, 4])
+    for act in (None, active):
+        a = dense.cohort(idx, active=act)
+        b = streamed.cohort(idx, active=act)
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k])), k
+            assert a[k].dtype == b[k].dtype
+
+
+def test_mmap_store_cohorts_and_stats(tiny, tmp_path):
+    """A save/open round-trip memory-maps the store (host_is_mmap) and
+    serves identical stats and cohorts; the transform policy rides in
+    meta.json."""
+    data, _ = tiny
+    t = Normalize(scale=1 / 2.0, mean=(0.1,), std=(0.9,))
+    src = HostCorpus(dict(data), transform=t)
+    d = src.save(str(tmp_path / "corpus"))
+    mapped = HostCorpus.open(d)
+    assert mapped.transform == t
+    assert mapped.memory_report()["host_is_mmap"]
+    np.testing.assert_array_equal(mapped.sizes(), src.sizes())
+    np.testing.assert_array_equal(mapped.label_histograms(),
+                                  src.label_histograms())
+    idx = np.asarray([1, 4, 2])
+    a, b = src.cohort(idx), mapped.cohort(idx)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_signature_keys_the_plane(tiny):
+    """Streaming signatures are tagged distinct from resident ones: a
+    compiled program can never be served across planes."""
+    data, _ = tiny
+    dense = ClientCorpus.from_stacked(dict(data))
+    streamed = HostCorpus.from_stacked(dict(data))
+    assert dense.signature() != streamed.signature()
+    assert streamed.signature()[0] == "stream"
+    # and the plane survives corpus conversion
+    assert as_data_plane(streamed, "resident").signature() \
+        == dense.signature()
+
+
+# ------------------------------------------------------ plane resolution
+
+def test_as_data_plane_modes(tiny):
+    data, _ = tiny
+    assert as_data_plane(dict(data)).plane == "resident"
+    assert as_data_plane(dict(data), "streaming").plane == "streaming"
+    # "auto" passes constructed corpora through untouched
+    hc = HostCorpus.from_stacked(dict(data))
+    assert as_data_plane(hc) is hc
+    cc = ClientCorpus.from_stacked(dict(data))
+    assert as_data_plane(cc) is cc
+    # over-budget dicts stream; explicit planes convert
+    assert as_data_plane(dict(data), resident_budget=16).plane \
+        == "streaming"
+    back = as_data_plane(hc, "resident")
+    assert isinstance(back, ClientCorpus)
+    with pytest.raises(ValueError, match="unknown data plane"):
+        as_data_plane(dict(data), "hybrid")
+
+
+# --------------------------------------------------- golden equivalence
+
+def _assert_matches(history, golden, *, exact_entropy=True):
+    for rec, g in zip(history, golden):
+        assert rec["selected"] == g["selected"]
+        assert rec["positive"] == g["positive"]
+        assert rec["negative"] == g["negative"]
+        if exact_entropy:
+            assert rec["entropy"] == pytest.approx(float(g["entropy"]),
+                                                   abs=1e-9)
+        else:
+            assert rec["entropy"] == pytest.approx(float(g["entropy"]),
+                                                   abs=1e-6)
+
+
+@pytest.mark.parametrize("engine,runtime", [
+    (None, None),
+    ("pipelined", RuntimeConfig(speculate=False)),
+    ("pipelined", RuntimeConfig(speculate=True)),
+])
+def test_streaming_plane_reproduces_seed_golden(tiny, engine, runtime):
+    """ISSUE acceptance: the streaming plane reproduces the resident
+    plane's recorded histories bit-for-bit, speculation on and off; the
+    speculative runs also prefetch every confirmed cohort."""
+    with open(SEED_GOLDEN) as f:
+        golden = json.load(f)["fedentropy"]["history"][:3]
+    data, params = tiny
+    server = fl.build(
+        "fedentropy", cnn.apply, params, dict(data),
+        fl.ServerConfig(num_clients=8, participation=0.5, seed=0),
+        LocalSpec(epochs=1, batch_size=20),
+        engine=engine, runtime=runtime, data_plane="streaming")
+    assert isinstance(server.corpus, HostCorpus)
+    for _ in range(len(golden)):
+        server.round()
+    _assert_matches(server.history, golden)
+    stats = server.corpus.prefetch_stats()
+    if runtime is not None and runtime.speculate:
+        hits = sum(r["spec_hit"] for r in server.history)
+        assert stats["hits"] == hits > 0
+        assert stats["hit_rate"] == 1.0
+    else:
+        assert stats["hits"] == stats["cancelled"] == 0
+
+
+@pytest.mark.parametrize("variant,comp", [
+    ("fedentropy", "fedentropy"),
+    ("fedentropy_queue", "fedentropy+queue"),
+])
+def test_streaming_plane_reproduces_uneven_golden(paper, variant, comp):
+    """Paper-scale N=100 goldens (fedentropy + the queue selector, whose
+    data schedule must ride the prefetch) hold on the streaming plane for
+    Server and PipelinedServer with speculation on and off. Ints are
+    exact; entropy floats tolerate compiled-program-shape differences on
+    multi-device CI (same policy as test_uneven_shard)."""
+    with open(UNEVEN_GOLDEN) as f:
+        golden = json.load(f)[variant]["history"]
+    data, params = paper
+    cfg = fl.ServerConfig(num_clients=PAPER_N, participation=0.1, seed=0,
+                          group_size=2)
+    local = LocalSpec(epochs=1, batch_size=10)
+    engines = {
+        "seq": fl.build(comp, cnn.apply, params, dict(data), cfg, local,
+                        data_plane="streaming"),
+        "off": fl.build(comp, cnn.apply, params, dict(data), cfg, local,
+                        engine="pipelined", runtime=RuntimeConfig(),
+                        data_plane="streaming"),
+        "spec": fl.build(comp, cnn.apply, params, dict(data), cfg, local,
+                         engine="pipelined",
+                         runtime=RuntimeConfig(speculate=True),
+                         data_plane="streaming"),
+    }
+    for server in engines.values():
+        assert isinstance(server.corpus, HostCorpus)
+        for _ in range(len(golden)):
+            server.round()
+    for name, server in engines.items():
+        assert [(r["selected"], r["positive"], r["negative"],
+                 r["comm"]["total_bytes"]) for r in server.history] == [
+            (g["selected"], g["positive"], g["negative"],
+             g["total_bytes"]) for g in golden], name
+        _assert_matches(server.history, golden, exact_entropy=False)
+    # spec-on vs spec-off run identical programs: bit-identical entropy
+    for a, b in zip(engines["off"].history, engines["spec"].history):
+        assert a["entropy"] == b["entropy"]
+
+
+# --------------------------------------------- prefetch + misprediction
+
+def test_prefetcher_hit_miss_cancel(tiny):
+    data, _ = tiny
+    hc = HostCorpus.from_stacked(dict(data))
+    idx = np.asarray([1, 3, 5])
+    plain = {k: np.asarray(v) for k, v in hc.cohort(idx).items()}
+    # hit: staged upload consumed, bit-equal to the synchronous gather
+    hc.prefetch(idx)
+    hit = hc.cohort(idx)
+    for k in plain:
+        np.testing.assert_array_equal(plain[k], np.asarray(hit[k]))
+    assert hc.prefetch_stats()["hits"] == 1
+    # miss: pending key differs -> discarded, sync gather still correct
+    hc.prefetch(np.asarray([0, 2, 4]))
+    missed = hc.cohort(idx)
+    for k in plain:
+        np.testing.assert_array_equal(plain[k], np.asarray(missed[k]))
+    assert hc.prefetch_stats()["misses"] == 1
+    # queue mask participates in the match key
+    hc.prefetch(idx, np.asarray([1, 2, 3]))
+    _ = hc.cohort(idx, active=np.asarray([3, 2, 1]))
+    assert hc.prefetch_stats()["misses"] == 2
+    # cancel: staged buffers dropped without being consumed
+    hc.prefetch(idx)
+    hc.cancel_prefetch()
+    assert hc.prefetch_stats()["cancelled"] == 1
+    assert hc.prefetch_stats()["hits"] == 1
+    # double-buffering reuses the two staging buffers (bounded memory)
+    nb = hc.prefetcher().staging_nbytes
+    for _ in range(4):
+        hc.prefetch(idx)
+        hc.cohort(idx)
+    assert hc.prefetcher().staging_nbytes == nb
+
+
+class _WrongSpeculationJudge(fl.MaxEntropyJudge):
+    """Oracle = real maxent; traced form always admits everyone, so every
+    round with a rejection misspeculates."""
+
+    def traced(self):
+        return fl.PassThroughJudge().traced()
+
+
+def test_misprediction_cancels_prefetch_and_stays_golden(tiny):
+    """A selector misprediction discards the staged cohort and falls back
+    to a synchronous gather — history still matches golden bit-for-bit."""
+    with open(SEED_GOLDEN) as f:
+        golden = json.load(f)["fedentropy"]["history"]
+    data, params = tiny
+    server = fl.build(
+        "fedentropy", cnn.apply, params, dict(data),
+        fl.ServerConfig(num_clients=8, participation=0.5, seed=0),
+        LocalSpec(epochs=1, batch_size=20),
+        judge=_WrongSpeculationJudge(), engine="pipelined",
+        runtime=RuntimeConfig(speculate=True), data_plane="streaming")
+    for _ in range(len(golden)):
+        server.round()
+    _assert_matches(server.history, golden)
+    stats = server.corpus.prefetch_stats()
+    misses = sum(not r["spec_hit"] for r in server.history)
+    hits = sum(r["spec_hit"] for r in server.history)
+    assert misses > 0                     # the judge guarantees misses
+    assert stats["cancelled"] >= misses - 1   # last round may be pending
+    assert stats["hits"] <= hits
+    for prev, rec in zip(server.history, server.history[1:]):
+        assert rec["redispatched"] == (not prev["spec_hit"])
+
+
+def test_prefetch_worker_errors_surface_on_take(tiny):
+    """An exception on the staging thread re-raises in the consumer, not
+    silently on a daemon thread."""
+    data, _ = tiny
+    hc = HostCorpus.from_stacked(dict(data))
+    idx = np.asarray([0, 1])
+    hc.prefetch(idx)
+    hc.prefetcher().take(idx, None)       # drain the good one
+    hc.prefetch(np.asarray([0, 10 ** 6]))  # out-of-bounds host gather
+    with pytest.raises(IndexError):
+        hc.cohort(np.asarray([0, 10 ** 6]))
+
+
+# ------------------------------------------------- thread-safe jit caches
+
+def test_bounded_jit_cache_thread_safe():
+    """Concurrent gets of one key build exactly once; concurrent distinct
+    keys never corrupt the LRU (the prefetch-thread requirement)."""
+    cache = BoundedJitCache(maxsize=64)
+    built = []
+    barrier = threading.Barrier(8)
+    errors = []
+
+    def work(tid):
+        try:
+            barrier.wait()
+            for i in range(200):
+                cache.get(("shared", i % 10),
+                          lambda i=i: built.append(i) or i)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=work, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(built) == 10               # one construction per key
+    assert len(cache) == 10
+
+
+def test_process_cache_counts_under_threads():
+    cache = enable_process_cache(maxsize=32)
+    try:
+        threads = [threading.Thread(
+            target=lambda: [cache.get(("k", i % 4), lambda: object())
+                            for i in range(100)]) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        s = cache.stats()
+        assert s["hits"] + s["misses"] == 400
+        assert s["misses"] == 4           # one build per key
+    finally:
+        disable_process_cache()
+
+
+# ------------------------------------------------------ memory accounting
+
+def test_memory_report_is_plane_aware():
+    rng = np.random.default_rng(0)
+    data = {"x": rng.integers(0, 255, (512, 16, 8), dtype=np.uint8),
+            "y": rng.integers(0, 10, (512, 16)).astype(np.int32),
+            "w": np.ones((512, 16), np.float32)}
+    dense = ClientCorpus.from_stacked(dict(data))
+    rep = dense.memory_report()
+    assert rep["plane"] == "resident"
+    assert rep["device_resident_bytes"] > 0
+    assert rep["host_mapped_bytes"] == 0 and rep["staging_nbytes"] == 0
+    streamed = HostCorpus.from_stacked(dict(data))
+    rep = streamed.memory_report()
+    assert rep["plane"] == "streaming"
+    assert rep["host_mapped_bytes"] == streamed.nbytes
+    assert rep["device_resident_bytes"] == 0       # nothing uploaded yet
+    # device bytes after a gather are exactly one cohort, not O(N)
+    m = 8
+    streamed.cohort(np.arange(m))
+    rep = streamed.memory_report()
+    assert rep["device_resident_bytes"] == streamed.cohort_nbytes(m)
+    assert rep["device_resident_bytes"] * 16 < streamed.nbytes
+
+
+def test_streaming_device_bytes_track_cohort_not_n(tiny):
+    """Growing N leaves the uploaded bytes untouched (O(|S_t|))."""
+    data, _ = tiny
+    small = HostCorpus.from_stacked(dict(data))
+    big = HostCorpus.from_stacked(
+        {k: np.concatenate([np.asarray(v)] * 8) for k, v in data.items()})
+    idx = np.asarray([0, 2, 4])
+    small.cohort(idx)
+    big.cohort(idx)
+    assert big.device_nbytes() == small.device_nbytes()
+    assert big.nbytes == 8 * small.nbytes
+
+
+# ------------------------------------------------- packed .npy ingest cache
+
+def _write_fake_cifar10(root, n=16):
+    d = os.path.join(root, "cifar-10-batches-py")
+    os.makedirs(d, exist_ok=True)
+    rng = np.random.default_rng(0)
+    for name in (*[f"data_batch_{i}" for i in range(1, 6)], "test_batch"):
+        blob = {b"data": rng.integers(0, 256, size=(n, 3072),
+                                      dtype=np.uint8),
+                b"labels": rng.integers(0, 10, size=n).tolist()}
+        with open(os.path.join(d, name), "wb") as f:
+            pickle.dump(blob, f)
+    return d
+
+
+def test_ingest_writes_and_reopens_packed_cache(tmp_path):
+    """First load packs .npy splits next to the dataset; the second load
+    memory-maps them (and survives deleting the pickles entirely)."""
+    root = str(tmp_path)
+    _write_fake_cifar10(root)
+    first = load_image_corpus(root)
+    cache_dir = packed_cache_dir(root, "cifar10")
+    assert os.path.isfile(os.path.join(cache_dir, "meta.json"))
+    second = load_image_corpus(root)
+    assert isinstance(second.train[0], np.memmap)
+    np.testing.assert_array_equal(np.asarray(first.train[0]),
+                                  np.asarray(second.train[0]))
+    np.testing.assert_array_equal(np.asarray(first.test[1]),
+                                  np.asarray(second.test[1]))
+    assert second.source == "cifar10" and second.num_classes == 10
+    # the packed cache alone is enough — auto-detection finds it after
+    # the raw release is gone
+    import shutil
+    shutil.rmtree(os.path.join(root, "cifar-10-batches-py"))
+    third = load_image_corpus(root)
+    np.testing.assert_array_equal(np.asarray(first.train[1]),
+                                  np.asarray(third.train[1]))
+    # cache=False goes back to the raw loader, which is now gone
+    with pytest.raises(FileNotFoundError):
+        load_image_corpus(root, cache=False)
+
+
+def test_host_corpus_maps_packed_ingest_directly(tmp_path):
+    """The packed cache is a plain .npy layout HostCorpus can stack from
+    without copying the full set into private memory."""
+    root = str(tmp_path)
+    _write_fake_cifar10(root, n=16)
+    load_image_corpus(root)                   # writes the packed cache
+    src = load_image_corpus(root)             # memory-mapped splits
+    xtr, ytr = src.train
+    parts = partition("case1", np.asarray(ytr), 4, 10, seed=0)
+    stacked = stack_clients(np.asarray(xtr), np.asarray(ytr), parts,
+                            batch_multiple=4)
+    hc = HostCorpus(stacked, transform=src.transform)
+    dense = ClientCorpus(dict(stacked), transform=src.transform)
+    idx = np.asarray([0, 3])
+    a, b = dense.cohort(idx), hc.cohort(idx)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# ------------------------------------------------------ queue + schedule
+
+def test_queue_selector_binds_streaming_plane(tiny):
+    """bind_data duck-types the plane: the queue selector ranks off the
+    streamed stats and its schedule applies inside the streamed finish."""
+    data, _ = tiny
+    hc = HostCorpus.from_stacked(dict(data))
+    cc = ClientCorpus.from_stacked(dict(data))
+    qs = fl.QueueSelector(8, eps=1.0, seed=0,
+                          queue=DataQueue(start_frac=0.5,
+                                          rounds_to_full=4))
+    qh = fl.QueueSelector(8, eps=1.0, seed=0,
+                          queue=DataQueue(start_frac=0.5,
+                                          rounds_to_full=4))
+    qs.bind_data(cc)
+    qh.bind_data(hc)
+    np.testing.assert_array_equal(qs._entropy, qh._entropy)
+    np.testing.assert_array_equal(qs._sizes, qh._sizes)
+    sel_a, sel_b = qs.select(4), qh.select(4)
+    assert sel_a == sel_b
+    np.testing.assert_array_equal(qs.data_schedule(sel_a),
+                                  qh.data_schedule(sel_b))

@@ -1,0 +1,83 @@
+"""Hypothesis properties of the streaming data plane (ISSUE satellite):
+
+(a) `HostCorpus` streamed histograms/entropy/sizes match `ClientCorpus`
+    dense stats **bit-exactly** over random small corpora — any client
+    count, sample count, class count, 0/1 weight mask, and stats chunk
+    size (including chunk sizes that split every boundary);
+(b) cohorts are bit-equal across planes for random index vectors (with
+    repeats) and random queue masks;
+(c) `as_data_plane("auto")` respects the residency budget exactly.
+
+The deterministic fixed-seed twins live in tests/test_stream_dataplane
+.py and run everywhere hypothesis is absent (locally the tier-1 suite
+skips this module; CI's dev extra installs hypothesis and runs it).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.data.corpus import ClientCorpus, Normalize  # noqa: E402
+from repro.data.stream import HostCorpus, as_data_plane  # noqa: E402
+
+
+def _corpus(rng, n, s, c):
+    """A stacked dict with the stack_clients contract: 0/1 float32 w."""
+    return {
+        "x": rng.integers(0, 256, (n, s, 3), dtype=np.uint8),
+        "y": rng.integers(0, c, (n, s)).astype(np.int32),
+        "w": (rng.random((n, s)) < 0.8).astype(np.float32),
+    }
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 24),
+       s=st.integers(1, 12), c=st.integers(2, 12),
+       chunk=st.integers(1, 30))
+def test_streamed_stats_bit_exact(seed, n, s, c, chunk):
+    rng = np.random.default_rng(seed)
+    data = _corpus(rng, n, s, c)
+    dense = ClientCorpus.from_stacked(dict(data))
+    streamed = HostCorpus(dict(data), stats_chunk=chunk)
+    np.testing.assert_array_equal(streamed.sizes(), dense.sizes())
+    np.testing.assert_array_equal(streamed.label_histograms(),
+                                  dense.label_histograms())
+    np.testing.assert_array_equal(streamed.label_entropy(),
+                                  dense.label_entropy())
+    np.testing.assert_array_equal(streamed.label_histograms(c + 3),
+                                  dense.label_histograms(c + 3))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 16),
+       s=st.integers(2, 10), m=st.integers(1, 8),
+       queued=st.booleans(), transform=st.booleans())
+def test_cohorts_bit_equal_across_planes(seed, n, s, m, queued, transform):
+    rng = np.random.default_rng(seed)
+    data = _corpus(rng, n, s, 4)
+    t = Normalize(scale=1 / 255.0, mean=(0.4, 0.5, 0.6),
+                  std=(0.2, 0.3, 0.4)) if transform else None
+    dense = ClientCorpus(dict(data), transform=t)
+    streamed = HostCorpus(dict(data), transform=t)
+    idx = rng.integers(0, n, m)                     # repeats allowed
+    active = rng.integers(0, s + 1, m) if queued else None
+    a = dense.cohort(idx, active=active)
+    b = streamed.cohort(idx, active=active)
+    assert set(a) == set(b)
+    for k in a:
+        assert a[k].dtype == b[k].dtype
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 8),
+       budget_slack=st.integers(-1, 1))
+def test_auto_plane_respects_budget(seed, n, budget_slack):
+    rng = np.random.default_rng(seed)
+    data = _corpus(rng, n, 4, 4)
+    nbytes = sum(v.nbytes for v in data.values())
+    plane = as_data_plane(dict(data),
+                          resident_budget=nbytes + budget_slack)
+    assert plane.plane == ("streaming" if budget_slack < 0
+                           else "resident")
