@@ -17,7 +17,7 @@ import sys
 
 from . import ablation_fig3, accuracy_table1, async_throughput, \
     comm_table2, dataplane_bench, engine_throughput, microbench, roofline, \
-    stream_bench, synergy_table3
+    roundscan, stream_bench, synergy_table3
 
 TABLES = {
     "table1": accuracy_table1.run,
@@ -30,6 +30,7 @@ TABLES = {
     "dataplane": dataplane_bench.run,
     "async": async_throughput.run,
     "stream": stream_bench.run,
+    "roundscan": roundscan.run,
 }
 
 

@@ -5,6 +5,11 @@
                         / sum_i L_i over i in A).
 ``masked_mean_tree``  — generic masked weighted mean over a leading client
                         axis of every leaf.
+``fused_aggregate``   — the same reduction as one flat segment-reduce:
+                        every leaf reshaped into a single (M, P) buffer and
+                        summed in one kernel launch (Pallas or xla) instead
+                        of a per-leaf tree_map — the launch-count win for
+                        LM-sized pytrees with hundreds of leaves.
 ``comm_bytes``        — accounting helper: uplink bytes actually transferred
                         for a round (positives upload models; every selected
                         device uploads its soft label first — stage 1).
@@ -13,20 +18,60 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _EPS = 1e-12
 
 
 def masked_mean_tree(stacked_tree, sizes: jax.Array, mask: jax.Array):
-    """Weighted mean over leading axis M of every leaf, weights sizes*mask."""
+    """Weighted mean over leading axis M of every leaf, weights sizes*mask.
+
+    Low-precision leaves (bf16/f16) accumulate in float32 — summing a
+    large cohort in the leaf dtype loses mass (bf16 has 8 mantissa bits)
+    — and cast back on return. Float32 leaves run the identical ops as
+    before, so fixed-seed histories are unchanged bit-for-bit.
+    """
     w = (jnp.asarray(sizes, jnp.float32) * jnp.asarray(mask, jnp.float32))
     tot = jnp.clip(jnp.sum(w), _EPS, None)
 
     def leaf(x):
-        wl = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
-        return jnp.sum(x * wl, axis=0) / tot.astype(x.dtype)
+        acc = jnp.promote_types(x.dtype, jnp.float32)
+        wl = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(acc)
+        out = jnp.sum(x.astype(acc) * wl, axis=0) / tot.astype(acc)
+        return out.astype(x.dtype)
 
     return jax.tree.map(leaf, stacked_tree)
+
+
+def fused_aggregate(stacked_tree, sizes: jax.Array, mask: jax.Array,
+                    *, backend: str | None = None):
+    """:func:`masked_mean_tree` as ONE flat reduction.
+
+    Flattens every leaf of the stacked client pytree into a single
+    ``(M, P)`` float32 buffer (P = total param count) and runs one
+    weighted segment-reduce over the client axis
+    (:func:`repro.kernels.ops.masked_weighted_sum`; ``backend="pallas"``
+    tiles the param axis through VMEM, ``"xla"``/None is the fused-jnp
+    reference), then unflattens back to the leaf shapes/dtypes. Matches
+    ``masked_mean_tree`` to float32 tolerance — the reduction order over
+    the flat buffer differs from the per-leaf order, so this is a
+    tolerance contract, not a bitwise one.
+    """
+    from ..kernels import ops as kops
+
+    leaves, treedef = jax.tree.flatten(stacked_tree)
+    m = leaves[0].shape[0]
+    w = (jnp.asarray(sizes, jnp.float32) * jnp.asarray(mask, jnp.float32))
+    tot = jnp.clip(jnp.sum(w), _EPS, None)
+    flat = jnp.concatenate(
+        [x.reshape(m, -1).astype(jnp.float32) for x in leaves], axis=1)
+    red = kops.masked_weighted_sum(flat, w, backend=backend) / tot
+    outs, off = [], 0
+    for x in leaves:
+        n = int(np.prod(x.shape[1:], dtype=np.int64))
+        outs.append(red[off:off + n].reshape(x.shape[1:]).astype(x.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, outs)
 
 
 def aggregate(stacked_params, sizes: jax.Array, mask: jax.Array):

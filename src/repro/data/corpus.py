@@ -368,6 +368,17 @@ class ClientCorpus(Mapping):
             out["w"] = out["w"] * live.astype(out["w"].dtype)
         return out
 
+    def traced_cohort(self, idx: jax.Array, active=None) -> dict:
+        """The cohort gather as a *traceable* op, for callers composing it
+        into a larger jitted program (the scan engine folds R rounds of
+        gather + ClientUpdate + judgment into one ``lax.scan``). Same math
+        as :meth:`cohort` — ``idx`` must already be a traced/device array;
+        the streaming plane deliberately has no such method (its gather is
+        host-side), which is how engines detect a foldable data plane."""
+        if active is None:
+            return self._gather_impl(self._arrays, idx)
+        return self._gather_queued_impl(self._arrays, idx, active)
+
     def cohort(self, idx, active=None) -> dict:
         """Jitted on-device gather of clients ``idx`` along axis 0.
 

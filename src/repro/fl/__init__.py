@@ -83,6 +83,7 @@ from .strategies import (
 from . import runtime  # noqa: E402 — registers engines; after .server
 from .runtime import (
     AsyncBufferedServer, AsyncConfig, PipelinedServer, RuntimeConfig,
+    ScanConfig, ScanServer,
 )
 
 __all__ = [
@@ -92,8 +93,8 @@ __all__ = [
     "FedAvgStrategy", "FedProxStrategy", "Judge", "LocalSpec",
     "MaxEntropyJudge", "MoonStrategy", "Normalize", "PassThroughJudge",
     "PipelinedServer", "PoolCatGrouper", "PoolSelector", "QueueSelector",
-    "RuntimeConfig", "ScaffoldAggregator", "ScaffoldStrategy", "Selector",
-    "Server", "ServerConfig", "UniformSelector",
-    "WeightedAverageAggregator", "build", "get", "names", "register",
-    "runtime", "total_uplink_bytes",
+    "RuntimeConfig", "ScaffoldAggregator", "ScaffoldStrategy",
+    "ScanConfig", "ScanServer", "Selector", "Server", "ServerConfig",
+    "UniformSelector", "WeightedAverageAggregator", "build", "get",
+    "names", "register", "runtime", "total_uplink_bytes",
 ]

@@ -2,6 +2,14 @@
 
 ``WeightedAverageAggregator`` — size-weighted FedAvg over the admitted
                                 mask (``core.aggregation.aggregate``).
+``FusedAverageAggregator``    — the same mean as ONE flat segment-reduce
+                                (``core.aggregation.fused_aggregate``):
+                                every leaf flattened into a single (M, P)
+                                buffer, reduced in one kernel launch
+                                (Pallas or xla) — float32-tolerance equal
+                                to ``weighted``, not bitwise, so it is an
+                                opt-in (``aggregator="fused"``) rather
+                                than the golden-history default.
 ``ScaffoldAggregator``        — the same average, then the SCAFFOLD damped
                                 server step w_g <- w_g + eta_g*(avg - w_g).
 ``DeviceConcatAggregator``    — FedCAT (arXiv 2202.12751): identity within
@@ -13,7 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.aggregation import aggregate
+from ..core.aggregation import aggregate, fused_aggregate
 from .registry import register
 
 
@@ -27,6 +35,28 @@ class WeightedAverageAggregator:
 
     def __call__(self, global_params, out, sizes, mask):
         return aggregate(out["params"], sizes, mask)
+
+
+@register("aggregator", "fused")
+class FusedAverageAggregator:
+    """``weighted``'s mean as one flat (M, P) segment-reduce.
+
+    ``backend="pallas"`` tiles the flattened param axis through the VMEM
+    kernel (``repro.kernels.fused_aggregate``); ``None``/"xla" uses the
+    fused-jnp reference. One launch instead of one-per-leaf — the win
+    grows with leaf count (LM pytrees; see benchmarks/roundscan.py).
+    """
+
+    def __init__(self, backend: str | None = None):
+        self.backend = backend
+
+    @classmethod
+    def from_config(cls, config, local):
+        return cls()
+
+    def __call__(self, global_params, out, sizes, mask):
+        return fused_aggregate(out["params"], sizes, mask,
+                               backend=self.backend)
 
 
 @register("aggregator", "scaffold")

@@ -91,12 +91,15 @@ def build(name: str, apply_fn, init_params, client_data, config,
     :class:`repro.fl.Server`; ``"pipelined"`` is the mesh-sharded,
     speculation-capable :class:`repro.fl.runtime.PipelinedServer`;
     ``"async"`` is the streaming buffered
-    :class:`repro.fl.runtime.AsyncBufferedServer`) and ``runtime`` passes
-    that engine's config to it — a :class:`repro.fl.runtime.RuntimeConfig`
-    for sequential/pipelined, an :class:`repro.fl.runtime.AsyncConfig` for
-    async. A ``runtime`` without an ``engine`` implies the engine the
-    config belongs to (RuntimeConfig → ``"pipelined"``, AsyncConfig →
-    ``"async"``); an unknown engine name raises ``ValueError`` listing the
+    :class:`repro.fl.runtime.AsyncBufferedServer`; ``"scan"`` is the
+    R-rounds-per-program :class:`repro.fl.runtime.ScanServer`) and
+    ``runtime`` passes that engine's config to it — a
+    :class:`repro.fl.runtime.RuntimeConfig` for sequential/pipelined, an
+    :class:`repro.fl.runtime.AsyncConfig` for async, a
+    :class:`repro.fl.runtime.ScanConfig` for scan. A ``runtime`` without
+    an ``engine`` implies the engine the config belongs to (RuntimeConfig
+    → ``"pipelined"``, AsyncConfig → ``"async"``, ScanConfig →
+    ``"scan"``); an unknown engine name raises ``ValueError`` listing the
     registered names, and an engine/runtime type mismatch errors here
     rather than deep in construction::
 
@@ -127,6 +130,8 @@ def build(name: str, apply_fn, init_params, client_data, config,
             engine_cls = Server
         elif isinstance(runtime, _runtime.AsyncConfig):
             engine_cls = get("engine", "async")
+        elif isinstance(runtime, _runtime.ScanConfig):
+            engine_cls = get("engine", "scan")
         else:
             engine_cls = get("engine", "pipelined")
     elif isinstance(engine, str):
@@ -145,7 +150,7 @@ def build(name: str, apply_fn, init_params, client_data, config,
             f"engine {engine_cls.__name__} takes runtime="
             f"{expected.__name__}, got {type(runtime).__name__} "
             "(RuntimeConfig drives sequential/pipelined, AsyncConfig "
-            "drives async)")
+            "drives async, ScanConfig drives scan)")
     kwargs = {}
     if runtime is not None:
         kwargs["runtime"] = runtime

@@ -40,6 +40,7 @@ from .compile_cache import (
     process_cache,
 )
 from .engine import PipelinedServer, RuntimeConfig, SequentialEngine
+from .scan_engine import ScanConfig, ScanServer
 from .sharding import (
     CLIENT_AXIS, client_mesh_from, make_client_mesh, make_sharded_client_fn,
     pad_to_multiple,
@@ -48,7 +49,8 @@ from .sharding import (
 __all__ = [
     "ArrivalClock", "AsyncBufferedServer", "AsyncConfig", "CLIENT_AXIS",
     "PipelinedServer", "ProcessCompileCache", "RuntimeConfig",
-    "SequentialEngine", "client_mesh_from", "disable_process_cache",
-    "enable_process_cache", "make_client_mesh", "make_sharded_client_fn",
-    "pad_to_multiple", "process_cache", "staleness_weights",
+    "ScanConfig", "ScanServer", "SequentialEngine", "client_mesh_from",
+    "disable_process_cache", "enable_process_cache", "make_client_mesh",
+    "make_sharded_client_fn", "pad_to_multiple", "process_cache",
+    "staleness_weights",
 ]

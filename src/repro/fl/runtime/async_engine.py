@@ -168,8 +168,7 @@ class AsyncBufferedServer(PipelinedServer):
 
     # ------------------------------------------------------------- sizing
     def _cohort_size(self) -> int:
-        cfg = self.config
-        return max(1, int(round(cfg.num_clients * cfg.participation)))
+        return self.config.cohort_size()
 
     @property
     def buffer_size(self) -> int:

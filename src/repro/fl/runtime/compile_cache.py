@@ -21,13 +21,14 @@ Usage::
 The per-server cache stays the default because process-level sharing keys
 on apply_fn identity: callers that rebuild closures per server get no
 sharing (each closure is its own key); callers that hold one apply_fn get
-full sharing. Both caches are thread-safe (they share ``BoundedJitCache``'s
-RLock): the streaming data plane's cohort prefetcher runs on a background
-thread, so round loops are no longer guaranteed host-serial.
+full sharing. Both caches are thread-safe and build *outside* the lock
+with per-key once semantics (see ``BoundedJitCache.get``): the streaming
+data plane's cohort prefetcher runs on a background thread, and a
+multi-second XLA compile on the round thread must not stall it.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Optional
 
 from ..server import BoundedJitCache
 
@@ -40,17 +41,14 @@ class ProcessCompileCache(BoundedJitCache):
         self.hits = 0
         self.misses = 0
 
-    def get(self, key: Any, make: Callable[[], Any]):
-        # hit probe + insert under the (reentrant) cache lock, so two
-        # threads racing the same key count one miss and build once
-        with self._lock:
-            hit = key in self._entries
-            fn = super().get(key, make)
-            if hit:
-                self.hits += 1
-            else:
-                self.misses += 1
-        return fn
+    def _record(self, hit: bool) -> None:
+        # runs under the base class's lock, on the hit probe and on the
+        # builder's insert — waiters that adopt a concurrent build count
+        # as hits, so racing threads on one key record exactly one miss
+        if hit:
+            self.hits += 1
+        else:
+            self.misses += 1
 
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,

@@ -191,7 +191,7 @@ class PipelinedServer(Server):
 
     def _speculative_round(self, spec_fn) -> dict:
         cfg = self.config
-        num = max(1, int(round(cfg.num_clients * cfg.participation)))
+        num = cfg.cohort_size()
 
         if self._pending is not None:
             sel, out = self._pending

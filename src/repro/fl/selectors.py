@@ -212,6 +212,7 @@ class QueueSelector:
         self._entropy: np.ndarray | None = None
         self._sizes: np.ndarray | None = None
         self._last_active: np.ndarray | None = None
+        self._last_frac: float | None = None   # schedule last applied
         self.round_idx = 0
         self._pos = 0
         self._neg = 0
@@ -245,9 +246,12 @@ class QueueSelector:
             sel = self._rng.choice(self.num_clients, num, replace=False)
         sel = [int(i) for i in sel]
         self._uses[sel] += 1
-        self._last_active = (None if self._sizes is None else
-                             self.queue.active(self.round_idx,
-                                               self._sizes[sel]))
+        if self._sizes is None:
+            self._last_active = None
+        else:
+            self._last_active = self.queue.active(self.round_idx,
+                                                  self._sizes[sel])
+            self._last_frac = self.queue.frac(self.round_idx)
         self.round_idx += 1
         return sel
 
@@ -263,6 +267,11 @@ class QueueSelector:
         self._neg += len(negatives)
 
     def stats(self) -> dict:
+        # queue_frac is the schedule the LAST select actually applied —
+        # None before any select (or while unbound, when the queue is
+        # off), never a peek at the upcoming round's frac (the old
+        # `frac(round_idx - 1)` reported round 0's frac at construction
+        # as if a round had run)
         return {"selector": "queue", "round": self.round_idx,
-                "queue_frac": self.queue.frac(max(self.round_idx - 1, 0)),
+                "queue_frac": self._last_frac,
                 "positive_total": self._pos, "negative_total": self._neg}

@@ -53,30 +53,64 @@ class ServerConfig:
     jit_cache_size: int = 4         # per-server compiled-program LRU bound
     group_size: int = 2             # FedCAT chain length (catgroups/catchain)
 
+    def cohort_size(self) -> int:
+        """|S_t| = max(1, round(N * C)) — the one place the paper's
+        cohort sizing lives; every engine reads it here. Python's
+        ``round`` is banker's (half-to-even): N=25, C=0.1 selects 2."""
+        return max(1, int(round(self.num_clients * self.participation)))
+
 
 class BoundedJitCache:
     """Tiny LRU for compiled programs, owned by one ``Server``.
 
-    Lookups/insertions hold an RLock: the streaming data plane's cohort
-    prefetcher runs on a background thread, so cache access is no longer
-    guaranteed host-serial.
+    Thread-safe: the streaming data plane's cohort prefetcher runs on a
+    background thread, so cache access is no longer guaranteed
+    host-serial. ``make()`` runs *outside* the lock — a multi-second XLA
+    compile must not stall other threads' lookups of unrelated keys —
+    with per-key once semantics: concurrent callers of the same missing
+    key dedupe onto one build (the others block on a per-key event and
+    adopt the builder's entry).
     """
 
     def __init__(self, maxsize: int):
         self.maxsize = max(1, int(maxsize))
         self._entries: OrderedDict[Any, Any] = OrderedDict()
+        self._building: dict[Any, threading.Event] = {}
         self._lock = threading.RLock()
 
+    def _record(self, hit: bool) -> None:
+        """Stats hook (called under the lock); subclasses count hits."""
+
     def get(self, key, make: Callable[[], Any]):
-        with self._lock:
-            if key in self._entries:
-                self._entries.move_to_end(key)
-                return self._entries[key]
+        while True:
+            with self._lock:
+                if key in self._entries:
+                    self._entries.move_to_end(key)
+                    self._record(True)
+                    return self._entries[key]
+                ev = self._building.get(key)
+                if ev is None:
+                    ev = self._building[key] = threading.Event()
+                    break
+            # another thread is compiling this key: wait, then re-probe
+            # (if its build failed, or the entry was evicted before we
+            # re-probed, we become the builder on the next pass)
+            ev.wait()
+        try:
             fn = make()
+        except BaseException:
+            with self._lock:
+                self._building.pop(key, None)
+            ev.set()
+            raise
+        with self._lock:
             self._entries[key] = fn
+            self._record(False)
             while len(self._entries) > self.maxsize:
                 self._entries.popitem(last=False)
-            return fn
+            self._building.pop(key, None)
+        ev.set()
+        return fn
 
     def __len__(self) -> int:
         with self._lock:
@@ -210,8 +244,7 @@ class Server:
     def round(self) -> dict:
         """One paper Alg. 2 round; returns the history record."""
         cfg = self.config
-        num = max(1, int(round(cfg.num_clients * cfg.participation)))
-        sel = self.selector.select(num)
+        sel = self.selector.select(cfg.cohort_size())
         idx = np.asarray(sel)
         out = self._run_cohort(sel, self.selector)
 

@@ -66,3 +66,11 @@ def entropy_judge_sweep(soft_labels, sizes, mask, *, backend=None):
         return entropy_judge_sweep(soft_labels, sizes, mask,
                                    interpret=_INTERPRET)
     return ref.entropy_judge_sweep_reference(soft_labels, sizes, mask)
+
+
+def masked_weighted_sum(flat, weights, *, backend=None):
+    backend = backend or _DEFAULT
+    if backend == "pallas":
+        from .fused_aggregate import masked_weighted_sum
+        return masked_weighted_sum(flat, weights, interpret=_INTERPRET)
+    return ref.masked_weighted_sum_reference(flat, weights)

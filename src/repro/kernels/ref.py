@@ -251,3 +251,13 @@ def entropy_judge_sweep_reference(
     from ..core.entropy import group_entropy, leave_one_out_entropies
     return (group_entropy(soft_labels, sizes, mask),
             leave_one_out_entropies(soft_labels, sizes, mask))
+
+
+def masked_weighted_sum_reference(
+    flat: jax.Array,      # (M, P)
+    weights: jax.Array,   # (M,)
+) -> jax.Array:
+    """(P,) = sum_i weights[i] * flat[i, :] — oracle for the fused
+    aggregation kernel (one fused-jnp reduction over the client axis)."""
+    w = jnp.asarray(weights, jnp.float32)
+    return jnp.sum(flat.astype(jnp.float32) * w[:, None], axis=0)

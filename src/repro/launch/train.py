@@ -156,6 +156,14 @@ def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
             buffer_size=args.buffer_size,
             staleness_alpha=args.staleness_alpha,
             clock=args.clock, seed=args.seed)
+    elif args.engine == "scan":
+        if args.speculate:
+            raise SystemExit(
+                "--speculate is a pipelined-engine knob: the scan engine "
+                "speculates every in-scan verdict already (the float64 "
+                "oracle replays each R-round block)")
+        runtime = fl.ScanConfig(rounds_per_scan=args.rounds_per_scan,
+                                spec_backend=args.judge_backend)
     else:
         runtime = fl.RuntimeConfig(speculate=args.speculate,
                                    spec_backend=args.judge_backend)
@@ -298,11 +306,16 @@ def main() -> None:
     ap.add_argument("--group-size", type=int, default=2,
                     help="FedCAT chain length (fedcat compositions)")
     ap.add_argument("--engine", default="mesh",
-                    choices=["mesh", "sequential", "pipelined", "async"],
+                    choices=["mesh", "sequential", "pipelined", "async",
+                             "scan"],
                     help="mesh = gradient-level jitted step; sequential/"
-                         "pipelined/async = weights-level repro.fl "
+                         "pipelined/async/scan = weights-level repro.fl "
                          "engines (async streams arrivals through "
-                         "max-entropy admission)")
+                         "max-entropy admission; scan folds R rounds "
+                         "into one lax.scan program)")
+    ap.add_argument("--rounds-per-scan", type=int, default=4,
+                    help="scan engine: rounds folded per jitted scan "
+                         "block (needs --selector uniform to fold >1)")
     ap.add_argument("--buffer-size", type=int, default=0,
                     help="async engine: screened arrivals per flush "
                          "(0 = cohort size, the reduction case)")
