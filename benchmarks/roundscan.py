@@ -22,12 +22,23 @@ N=100 on CPU).
 
 A second section times the fused (M, P) aggregation
 (``core.aggregation.fused_aggregate``, one flat segment-reduce) against
-the per-leaf ``masked_mean_tree`` on a CNN pytree (few large leaves) and
-an LM-like pytree (many small leaves). On CPU the flatten itself (XLA's
-many-operand concatenate) dominates, so the reported ratio prices the
-copy a single-launch layout costs there; the launch-count saving the
-layout buys is an accelerator property, the numerics contract
-(tolerance-equal to the per-leaf mean) is what the suite gates on.
+the per-leaf ``masked_mean_tree`` on a CNN pytree (few large leaves), an
+LM-like pytree (many small leaves), and the same LM pytree with bf16
+leaves — where the gate is the accumulate-dtype contract: the fused
+paths must cast to f32 *before* reducing (``accum_f32_ok``: within 2x
+the bf16 quantization floor of the exact float64 mean), exactly like
+``masked_mean_tree``. On CPU the flatten itself (XLA's many-operand
+concatenate) dominates, so the reported ratio prices the copy a
+single-launch layout costs there; the launch-count saving the layout
+buys is an accelerator property, the numerics contract (tolerance-equal
+to the per-leaf mean) is what the suite gates on.
+
+A third section reruns the engine race on the reduced LM fine-tune
+workload (qwen3 reduced arch, full-window ``lmstep`` clients, the
+``pools-traced`` selector folded into the scan, ``params_mode="remat"``)
+— real per-round compute, so the gate is scan >= pipelined rounds/sec,
+plus the memory claims: remat's stacked ys carry no params leaf and stay
+below one copy of the model (stack mode pins R copies).
 
 Smoke mode (CI): same N=100 corpus, fewer timed rounds, artifact written
 to ``BENCH_roundscan.json``:
@@ -46,17 +57,23 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.fl as fl
-from repro.core.aggregation import fused_aggregate, masked_mean_tree
+from repro.configs import ARCHS
+from repro.core.aggregation import (
+    fused_aggregate, masked_mean_tree, tree_bytes,
+)
 from repro.core.strategies import LocalSpec
 from repro.data.partition import partition, stack_clients
-from repro.data.synthetic import make_image_dataset
+from repro.data.synthetic import make_image_dataset, make_token_dataset
 from repro.fl.runtime import RuntimeConfig, ScanConfig
+from repro.launch.train import lm_window_apply, stack_lm_clients
 from repro.models import cnn
+from repro.models.api import build_model
 
 NUM_CLIENTS = 100
 PARTICIPATION = 0.1     # paper's C=0.1 at its N=100 scale
 HW = 16
 R = 16                  # rounds folded per scan program
+LM_R = 8                # fold depth for the LM-arch section
 
 
 def mlp_init(key, hw: int, num_classes: int) -> dict:
@@ -162,6 +179,37 @@ def _lm_like(m: int, seed: int = 0):
     return tree
 
 
+def _accum_f32_check(tree, sizes, mask) -> tuple[float, float, bool]:
+    """Accumulate-dtype gate for low-precision leaves.
+
+    The exact weighted mean is computed in numpy float64; the best any
+    f32-accumulating path can do is that mean quantized to the leaf
+    dtype. The fused paths must land within 2x that quantization floor —
+    accumulating IN bf16 (the bug this gates against) drifts well past
+    it, while f32 accumulation + one cast-back sits on it.
+    """
+    w = np.asarray(sizes, np.float64) * np.asarray(mask, np.float64)
+    tot = max(w.sum(), 1e-12)
+
+    def exact(x):
+        return np.einsum("m,m...->...", w,
+                         np.asarray(x, np.float64)) / tot
+
+    refs = [exact(x) for x in jax.tree.leaves(tree)]
+    floor = max(
+        float(np.max(np.abs(np.asarray(
+            jnp.asarray(r).astype(x.dtype), np.float64) - r)))
+        for r, x in zip(refs, jax.tree.leaves(tree)))
+    errs = []
+    for backend in ("xla", "pallas"):
+        got = fused_aggregate(tree, sizes, mask, backend=backend)
+        errs.append(max(
+            float(np.max(np.abs(np.asarray(g, np.float64) - r)))
+            for g, r in zip(jax.tree.leaves(got), refs)))
+    err = max(errs)
+    return err, floor, bool(err <= 2.0 * floor + 1e-7)
+
+
 def time_aggregation(repeats: int = 200) -> dict:
     """Jitted per-leaf tree_map mean vs the one-launch fused reduce."""
     m = 10
@@ -169,7 +217,12 @@ def time_aggregation(repeats: int = 200) -> dict:
                           num_classes=4)
     cnn_tree = jax.tree.map(
         lambda x: jnp.stack([x + 0.01 * i for i in range(m)]), cnn_params)
-    trees = {"cnn": cnn_tree, "lm": _lm_like(m)}
+    lm_tree = _lm_like(m)
+    # bf16 leaves: PR 8 made masked_mean_tree accumulate low-precision
+    # leaves in f32; the fused paths cast to f32 BEFORE the flatten, so
+    # they must meet the same accumulate-dtype contract (gated below)
+    lm_bf16 = jax.tree.map(lambda x: x.astype(jnp.bfloat16), lm_tree)
+    trees = {"cnn": cnn_tree, "lm": lm_tree, "lm_bf16": lm_bf16}
     sizes = jnp.asarray(np.full(m, 10.0), jnp.float32)
     mask = jnp.asarray(([1.0, 0.0] * m)[:m], jnp.float32)
 
@@ -178,8 +231,10 @@ def time_aggregation(repeats: int = 200) -> dict:
                                                        backend="xla"))
     out = {}
     for name, tree in trees.items():
-        rec = {"leaves": len(jax.tree.leaves(tree)),
-               "params": int(sum(x[0].size for x in jax.tree.leaves(tree)))}
+        leaves = jax.tree.leaves(tree)
+        rec = {"leaves": len(leaves),
+               "params": int(sum(x[0].size for x in leaves)),
+               "dtype": str(leaves[0].dtype)}
         for label, fn in (("tree", tree_fn), ("fused_xla", fused_fn)):
             jax.block_until_ready(fn(tree, sizes, mask))   # compile
             t0 = time.perf_counter()
@@ -194,16 +249,107 @@ def time_aggregation(repeats: int = 200) -> dict:
         rec["pallas_max_err"] = float(max(
             jnp.max(jnp.abs(g.astype(jnp.float32) - w.astype(jnp.float32)))
             for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want))))
+        err, floor, ok = _accum_f32_check(tree, sizes, mask)
+        rec["accum_err"] = err
+        rec["accum_floor"] = floor
+        rec["accum_f32_ok"] = ok
         out[name] = rec
     return out
+
+
+# ---- LM-arch engine section ----------------------------------------------
+
+def make_lm_setup(seed: int = 0):
+    """Reduced LM fine-tune workload: the fedentropy composition with the
+    scan-foldable pools and the full-window lmstep client rule."""
+    cfg = ARCHS["qwen3-0.6b"].reduced().replace(
+        remat="none", param_dtype="float32", dtype="float32")
+    model = build_model(cfg)
+    logical, samples, seq = 8, 4, 16
+    corpus, dom = make_token_dataset(
+        vocab_size=min(cfg.vocab_size, 512), num_domains=logical,
+        docs_per_domain=16, seq_len=seq, seed=seed)
+    idx = [np.where(dom == c % logical)[0] for c in range(logical)]
+    data = stack_lm_clients(corpus, idx, samples, seq, seed)
+    params = model.init(jax.random.PRNGKey(seed))
+    return lm_window_apply(model, cfg), data, params
+
+
+def time_lm_engines(rounds: int, repeats: int) -> tuple[list[dict], dict]:
+    """scan (pools folded, remat) vs pipelined vs sequential on the LM
+    workload; per-round compute is real here, so the scan's win is the
+    removed host surfacing, not free — the gate is >= pipelined."""
+    apply_fn, data, params = make_lm_setup(0)
+    config = fl.ServerConfig(num_clients=8, participation=0.5, seed=0)
+    local = LocalSpec(lr=0.05, epochs=1, batch_size=4)
+    drivers = {
+        "sequential": dict(engine=None, runtime=None),
+        "pipelined": dict(engine="pipelined",
+                          runtime=RuntimeConfig(speculate=True)),
+        "scan": dict(engine="scan",
+                     runtime=ScanConfig(rounds_per_scan=LM_R,
+                                        params_mode="remat")),
+    }
+    servers, best = {}, {}
+    for name, kwargs in drivers.items():
+        s = fl.build("fedentropy", apply_fn, params, data, config, local,
+                     selector="pools-traced", strategy="lmstep", **kwargs)
+        for _ in range(2 * LM_R):      # warmup: compile + two full blocks
+            s.round()
+        jax.block_until_ready(s.global_params)
+        servers[name] = s
+        best[name] = float("inf")
+    scan = servers["scan"]
+    assert scan.scan_rounds() == LM_R, scan.fallback_reasons
+    for _ in range(repeats):
+        for name, server in servers.items():
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                server.round()
+            jax.block_until_ready(server.global_params)
+            best[name] = min(best[name], time.perf_counter() - t0)
+    results = [{"driver": name, "rounds": rounds, "wall_s": best[name],
+                "rounds_per_s": rounds / best[name],
+                "s_per_round": best[name] / rounds, "repeats": repeats}
+               for name in drivers]
+    by = {r["driver"]: r for r in results}
+    # memory: remat ys carry no params leaf; a stack-mode twin of the
+    # same block (eval_shape only — nothing runs) shows what R copies of
+    # the pytree would have pinned
+    stack_twin = fl.build(
+        "fedentropy", apply_fn, params, data, config, local,
+        selector="pools-traced", strategy="lmstep", engine="scan",
+        runtime=ScanConfig(rounds_per_scan=LM_R, params_mode="stack"))
+    remat_shapes = scan.block_ys_shapes(LM_R)
+    blob = {
+        "arch": "qwen3-0.6b (reduced)", "rounds_per_scan": LM_R,
+        "speedup_scan_vs_pipelined": (by["scan"]["rounds_per_s"] /
+                                      by["pipelined"]["rounds_per_s"]),
+        "scan_ge_pipelined": (by["scan"]["rounds_per_s"] >=
+                              by["pipelined"]["rounds_per_s"]),
+        "scan_matches_sequential": histories_match(
+            scan.history, servers["sequential"].history),
+        "remat_ys_params_free": "params" not in remat_shapes,
+        "remat_ys_nbytes": scan.stacked_ys_nbytes(LM_R),
+        "stack_ys_nbytes": stack_twin.stacked_ys_nbytes(LM_R),
+        "params_nbytes": tree_bytes(params),
+        # the LM-scale claim: a remat block's stacked ys stay below even
+        # ONE copy of the model, vs R copies in stack mode
+        "remat_ys_lt_params": (scan.stacked_ys_nbytes(LM_R) <
+                               tree_bytes(params)),
+        "mismatch_rounds": scan.stats()["mismatch_rounds"],
+    }
+    return results, blob
 
 
 def run(fast: bool = False, smoke: bool = False):
     """Benchmark-harness entry: returns (csv_rows, json_blob)."""
     if smoke or fast:
         rounds, repeats, agg_repeats = 2 * R, 2, 50
+        lm_rounds, lm_repeats = 2 * LM_R, 3
     else:
         rounds, repeats, agg_repeats = 4 * R, 5, 200
+        lm_rounds, lm_repeats = 4 * LM_R, 3
 
     data, params = make_setup(0)
     results, servers = time_engines(data, params, rounds, repeats)
@@ -214,10 +360,15 @@ def run(fast: bool = False, smoke: bool = False):
     match = histories_match(servers["scan"].history,
                             servers["sequential"].history)
     agg = time_aggregation(agg_repeats)
+    lm_results, lm = time_lm_engines(lm_rounds, lm_repeats)
 
     rows = []
     for r in results:
         rows.append((f"roundscan_{r['driver']}",
+                     f"{r['s_per_round'] * 1e6:.0f}",
+                     f"{r['rounds_per_s']:.2f}rps"))
+    for r in lm_results:
+        rows.append((f"roundscan_lm_{r['driver']}",
                      f"{r['s_per_round'] * 1e6:.0f}",
                      f"{r['rounds_per_s']:.2f}rps"))
     for name, rec in agg.items():
@@ -231,6 +382,7 @@ def run(fast: bool = False, smoke: bool = False):
             "speedup_ge_2x": speedup >= 2.0,
             "scan_matches_sequential": match,
             "aggregation": agg,
+            "lm": {"results": lm_results, **lm},
             "devices": len(jax.devices()),
             "backend": jax.default_backend()}
     return rows, blob
@@ -251,6 +403,15 @@ def main() -> None:
     print("scan matches sequential:", blob["scan_matches_sequential"])
     print(f"scan vs pipelined: {blob['speedup_scan_vs_pipelined']:.2f}x "
           f"(>=2x: {blob['speedup_ge_2x']})")
+    lm = blob["lm"]
+    print(f"lm scan vs pipelined: "
+          f"{lm['speedup_scan_vs_pipelined']:.2f}x "
+          f"(>=1x: {lm['scan_ge_pipelined']}, "
+          f"matches sequential: {lm['scan_matches_sequential']})")
+    print(f"lm remat ys: {lm['remat_ys_nbytes']}B vs "
+          f"{lm['stack_ys_nbytes']}B stacked, params "
+          f"{lm['params_nbytes']}B "
+          f"(params-free: {lm['remat_ys_params_free']})")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(blob, f, indent=1)

@@ -1,72 +1,124 @@
-"""FL fine-tuning of an assigned LM architecture with gradient-level
-FedEntropy — the mesh-scale formulation (DESIGN.md §2.2) on CPU devices.
+"""FL fine-tuning of an assigned LM architecture through the registry's
+scan engine — the weights-level paper loop (Alg. 2, E local epochs) at
+LM scale, R rounds per jitted program.
 
-Eight logical clients with domain-skewed token data feed four mesh client
-slots per round; the in-step judgment masks gradient contributions; the
-epsilon-greedy pools steer selection across rounds. Works with any
-``--arch`` from the registry (reduced variants).
+The composition is ``fedentropy`` with its two LM-scale swaps:
+
+* ``selector="pools-traced"`` — the paper's eps-greedy pools on a
+  ``jax.random`` stream, so the pool draw/re-file folds INTO the scan as
+  a device-resident carry (no R=1 fallback; the script asserts it);
+* ``ScanConfig(params_mode="remat")`` — the scan stacks only soft
+  labels/verdicts/cohorts, O(cohort x vocab) per round instead of R
+  copies of the LM pytree; mismatched rounds rematerialize their rewind
+  point by replaying the confirmed prefix.
+
+The client rule is ``strategy="lmstep"``: every next-token position of
+an (S, L+1) token window trains (minibatch SGD + momentum), and the
+soft label is the weighted mean next-token distribution (paper Eq. 2,
+LM analog). ``--verify`` re-runs the same composition on the sequential
+``Server`` and asserts histories match record-for-record — the scan is
+an execution strategy, not a different algorithm. ``--kernels pallas``
+routes attention through the Pallas flash kernels inside the traced
+client update.
 
   PYTHONPATH=src python examples/fl_llm_finetune.py --arch mamba2-130m
+  PYTHONPATH=src python examples/fl_llm_finetune.py --rounds 8 --verify
 """
 import argparse
+import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+import repro.fl as fl
 from repro.configs import ARCHS
-from repro.core.distributed import FedSpec, make_train_step
-from repro.core.pools import DevicePools
 from repro.data.synthetic import make_token_dataset
+from repro.kernels import ops as kops
+from repro.launch.train import lm_window_apply, stack_lm_clients
 from repro.models.api import build_model
-from repro.optim import sgd
+
+
+def build_setup(args):
+    cfg = ARCHS[args.arch].reduced().replace(
+        remat="none", param_dtype="float32", dtype="float32")
+    model = build_model(cfg)
+    logical, samples, seq = 8, 8, args.seq_len
+
+    corpus, dom = make_token_dataset(
+        vocab_size=min(cfg.vocab_size, 512), num_domains=logical,
+        docs_per_domain=48, seq_len=seq)
+    client_idx = [np.where(dom == c % logical)[0] for c in range(logical)]
+    data = stack_lm_clients(corpus, client_idx, samples, seq, seed=0)
+
+    config = fl.ServerConfig(num_clients=logical, participation=0.5,
+                             eps=0.8, seed=0)
+    local = fl.LocalSpec(lr=0.05, momentum=0.5, epochs=1, batch_size=4)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, data, config, local, params
+
+
+def build_server(args, setup, *, engine, runtime=None):
+    cfg, model, data, config, local, params = setup
+    return fl.build("fedentropy", lm_window_apply(model, cfg), params,
+                    data, config, local, selector="pools-traced",
+                    strategy="lmstep", engine=engine, runtime=runtime)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--rounds-per-scan", type=int, default=4)
+    ap.add_argument("--params-mode", default="remat",
+                    choices=["stack", "remat"])
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--kernels", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--verify", action="store_true",
+                    help="also run the sequential Server and assert "
+                         "histories match record-for-record")
     args = ap.parse_args()
+    kops.set_default_backend(args.kernels)
 
-    cfg = ARCHS[args.arch].reduced().replace(
-        remat="none", param_dtype="float32", dtype="float32")
-    model = build_model(cfg)
-    m, per, seq = 4, 2, 64
-    logical = 8
+    setup = build_setup(args)
+    server = build_server(
+        args, setup, engine="scan",
+        runtime=fl.ScanConfig(rounds_per_scan=args.rounds_per_scan,
+                              params_mode=args.params_mode))
+    R = server.scan_rounds()
+    assert R == args.rounds_per_scan, (
+        f"scan fell back to sequential rounds: {server.fallback_reasons}")
+    ys_bytes = server.stacked_ys_nbytes(R)
+    print(f"scan: R={R} params_mode={args.params_mode} "
+          f"stacked-ys={ys_bytes}B "
+          f"({sorted(server.block_ys_shapes(R))} stacked)")
 
-    corpus, dom = make_token_dataset(
-        vocab_size=min(cfg.vocab_size, 512), num_domains=logical,
-        docs_per_domain=48, seq_len=seq)
-
-    fed = FedSpec(num_clients=m)
-    opt = sgd(lr=0.05, momentum=0.5)
-    step = jax.jit(make_train_step(model, opt, fed), donate_argnums=(0, 1))
-
-    params = model.init(jax.random.PRNGKey(0))
-    opt_state = opt.init(params)
-    pools = DevicePools(logical, eps=0.8, seed=0)
-    rng = np.random.default_rng(0)
-
+    t0 = time.time()
     for it in range(args.rounds):
-        sel = pools.select(m)
-        rows = [corpus[rng.choice(np.where(dom == c % logical)[0], per)]
-                for c in sel]
-        batch = {"tokens": jnp.asarray(
-            np.concatenate(rows)[:, :seq], jnp.int32)}
-        if cfg.family == "vlm":
-            batch["patches"] = jnp.zeros(
-                (m * per, cfg.num_patches, cfg.d_model), jnp.float32)
-        if cfg.family == "encdec":
-            batch["frames"] = jnp.zeros(
-                (m * per, cfg.encoder_seq, cfg.d_model), jnp.float32)
-        params, opt_state, metrics = step(params, opt_state, batch)
-        mask = np.asarray(metrics["mask"])
-        pools.update([sel[i] for i in range(m) if mask[i] > 0],
-                     [sel[i] for i in range(m) if mask[i] == 0])
-        print(f"round {it}: loss={float(metrics['loss']):.4f} "
-              f"positives={int(metrics['num_positive'])}/{m} "
-              f"entropy={float(metrics['entropy']):.3f}")
-    print("pools:", pools.stats())
+        rec = server.round()
+        print(f"round {it}: positives={len(rec['positive'])}/"
+              f"{len(rec['selected'])} entropy={rec['entropy']:.3f} "
+              f"spec={'hit' if rec['spec_hit'] else 'miss'}")
+    dt = time.time() - t0
+    s = server.stats()
+    print(f"done: {args.rounds} rounds in {dt:.1f}s "
+          f"({dt / args.rounds:.2f}s/round); blocks={s['blocks']} "
+          f"mismatch_rounds={s['mismatch_rounds']} "
+          f"selector={s['selector']}")
+
+    if args.verify:
+        seq_server = build_server(args, setup, engine="sequential")
+        for _ in range(args.rounds):
+            seq_server.round()
+        for a, b in zip(server.history, seq_server.history):
+            for k in ("round", "selected", "positive", "negative",
+                      "entropy"):
+                assert a[k] == b[k], (a, b)
+        leaves = zip(jax.tree.leaves(server.global_params),
+                     jax.tree.leaves(seq_server.global_params))
+        assert all(bool((np.asarray(x) == np.asarray(y)).all())
+                   for x, y in leaves)
+        print(f"verify: {args.rounds} scan rounds == sequential Server "
+              "(histories and params bit-for-bit)")
 
 
 if __name__ == "__main__":

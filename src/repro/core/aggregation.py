@@ -44,15 +44,20 @@ def masked_mean_tree(stacked_tree, sizes: jax.Array, mask: jax.Array):
 
 
 def fused_aggregate(stacked_tree, sizes: jax.Array, mask: jax.Array,
-                    *, backend: str | None = None):
+                    *, backend: str | None = None, block_p: int = 2048,
+                    vmem_budget_bytes: int = 4 * 1024 * 1024):
     """:func:`masked_mean_tree` as ONE flat reduction.
 
     Flattens every leaf of the stacked client pytree into a single
     ``(M, P)`` float32 buffer (P = total param count) and runs one
     weighted segment-reduce over the client axis
     (:func:`repro.kernels.ops.masked_weighted_sum`; ``backend="pallas"``
-    tiles the param axis through VMEM, ``"xla"``/None is the fused-jnp
-    reference), then unflattens back to the leaf shapes/dtypes. Matches
+    tiles both the client and param axes through a
+    ``vmem_budget_bytes``-bounded grid — LM-sized P never pins an
+    (M, P) stripe in VMEM — ``"xla"``/None is the fused-jnp reference),
+    then unflattens back to the leaf shapes/dtypes. The pre-flatten f32
+    cast means low-precision (bf16) leaves accumulate in f32, the same
+    accumulate-dtype contract as ``masked_mean_tree``. Matches
     ``masked_mean_tree`` to float32 tolerance — the reduction order over
     the flat buffer differs from the per-leaf order, so this is a
     tolerance contract, not a bitwise one.
@@ -65,7 +70,9 @@ def fused_aggregate(stacked_tree, sizes: jax.Array, mask: jax.Array,
     tot = jnp.clip(jnp.sum(w), _EPS, None)
     flat = jnp.concatenate(
         [x.reshape(m, -1).astype(jnp.float32) for x in leaves], axis=1)
-    red = kops.masked_weighted_sum(flat, w, backend=backend) / tot
+    red = kops.masked_weighted_sum(
+        flat, w, backend=backend, block_p=block_p,
+        vmem_budget_bytes=vmem_budget_bytes) / tot
     outs, off = [], 0
     for x in leaves:
         n = int(np.prod(x.shape[1:], dtype=np.int64))

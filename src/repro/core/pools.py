@@ -20,7 +20,10 @@ is as close to uniform (maximum entropy) as a greedy pass can make it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import partial
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .entropy import entropy_np
@@ -70,6 +73,66 @@ class DevicePools:
 
     def stats(self) -> dict:
         return {"positive": len(self.positive), "negative": len(self.negative)}
+
+
+# ---- traced pools (device-resident carry for the scan engine) ------------
+#
+# The paper's eps-greedy pool draw, as a pure jax function of
+# (PRNG key, membership masks): the SAME jitted program backs both the
+# host-side :class:`repro.fl.selectors.TracedPoolSelector` and the scan
+# engine's in-``lax.scan`` pool carry, which is what makes an R-round
+# folded block's selection stream bit-for-bit equal to the sequential
+# ``Server`` driving the selector one round at a time. All scoring stays
+# in int32/uint32 — the container runs without ``jax_enable_x64``, and a
+# silent float64->float32 downcast in a sort key would fork the streams.
+
+@partial(jax.jit, static_argnames=("num", "eps"))
+def pools_draw(key: jax.Array, pos_mask: jax.Array, neg_mask: jax.Array,
+               *, num: int, eps: float):
+    """Alg. 2 lines 4-8 as a traced draw.
+
+    With probability ``eps`` the round draws from the positive pool,
+    otherwise the negative; if the chosen pool has fewer than ``num``
+    members the remainder spills into the other pool (Sec. 3.4) — every
+    device is always in exactly one pool between rounds, so the two pools
+    jointly cover any ``num <= N``. Returns ``(sel, new_key)`` where
+    ``sel`` is (num,) int32 client ids; the draw does NOT mutate the
+    masks (removal + verdict re-filing fuse in :func:`pools_refile`).
+
+    Mechanics: a uniform random uint31 per client fixes a random
+    permutation (stable argsort of the negated bits), then a second
+    stable argsort by first-pool membership floats the chosen pool's
+    members to the front while preserving that permutation within each
+    pool — i.e. "uniform without replacement from the first pool, then
+    uniform from the spillover", exactly the host ``DevicePools``
+    semantics (under a different RNG stream).
+    """
+    k_eps, k_bits, new_key = jax.random.split(key, 3)
+    use_pos = jax.random.uniform(k_eps) < eps
+    first = jnp.where(use_pos, pos_mask, neg_mask).astype(jnp.float32)
+    n = pos_mask.shape[0]
+    # uint32 >> 1 fits int32: the sort key stays exact without x64
+    bits = (jax.random.bits(k_bits, (n,), jnp.uint32) >> jnp.uint32(1))
+    perm = jnp.argsort(-bits.astype(jnp.int32), stable=True)
+    front = jnp.argsort(-first[perm], stable=True)
+    sel = perm[front][:num].astype(jnp.int32)
+    return sel, new_key
+
+
+@jax.jit
+def pools_refile(pos_mask: jax.Array, neg_mask: jax.Array,
+                 sel: jax.Array, admitted: jax.Array):
+    """Alg. 2 line 22 fused with the draw's removal: the round's cohort
+    leaves both pools and re-files by verdict (admitted -> positive),
+    every other client's membership untouched. ``admitted`` is the (m,)
+    0/1 verdict mask aligned with ``sel``."""
+    n = pos_mask.shape[0]
+    hot = jnp.zeros((n,), jnp.float32).at[sel].set(1.0)
+    acc = jnp.zeros((n,), jnp.float32).at[sel].set(
+        admitted.astype(jnp.float32))
+    new_pos = jnp.where(hot > 0, acc, pos_mask.astype(jnp.float32))
+    new_neg = jnp.where(hot > 0, 1.0 - acc, neg_mask.astype(jnp.float32))
+    return new_pos, new_neg
 
 
 # ---- label-distribution stats (FedCAT grouping inputs) -------------------

@@ -71,14 +71,15 @@ from .judges import BudgetedJudge, MaxEntropyJudge, PassThroughJudge
 from .protocols import Aggregator, ClientStrategy, Judge, Selector
 from .registry import Composition, build, get, names, register
 from .selectors import (
-    CatGrouper, PoolCatGrouper, PoolSelector, QueueSelector, UniformSelector,
+    CatGrouper, PoolCatGrouper, PoolSelector, QueueSelector,
+    TracedPoolSelector, UniformSelector,
 )
 from .server import (
     BoundedJitCache, Server, ServerConfig, total_uplink_bytes,
 )
 from .strategies import (
-    CatChainStrategy, FedAvgStrategy, FedProxStrategy, MoonStrategy,
-    ScaffoldStrategy,
+    CatChainStrategy, FedAvgStrategy, FedProxStrategy, LMWindowStrategy,
+    MoonStrategy, ScaffoldStrategy,
 )
 from . import runtime  # noqa: E402 — registers engines; after .server
 from .runtime import (
@@ -90,11 +91,12 @@ __all__ = [
     "Aggregator", "AsyncBufferedServer", "AsyncConfig", "BoundedJitCache",
     "BudgetedJudge", "CatChainStrategy", "CatGrouper", "ClientCorpus",
     "ClientStrategy", "Composition", "DataQueue", "DeviceConcatAggregator",
-    "FedAvgStrategy", "FedProxStrategy", "Judge", "LocalSpec",
-    "MaxEntropyJudge", "MoonStrategy", "Normalize", "PassThroughJudge",
-    "PipelinedServer", "PoolCatGrouper", "PoolSelector", "QueueSelector",
-    "RuntimeConfig", "ScaffoldAggregator", "ScaffoldStrategy",
-    "ScanConfig", "ScanServer", "Selector", "Server", "ServerConfig",
-    "UniformSelector", "WeightedAverageAggregator", "build", "get",
-    "names", "register", "runtime", "total_uplink_bytes",
+    "FedAvgStrategy", "FedProxStrategy", "Judge", "LMWindowStrategy",
+    "LocalSpec", "MaxEntropyJudge", "MoonStrategy", "Normalize",
+    "PassThroughJudge", "PipelinedServer", "PoolCatGrouper", "PoolSelector",
+    "QueueSelector", "RuntimeConfig", "ScaffoldAggregator",
+    "ScaffoldStrategy", "ScanConfig", "ScanServer", "Selector", "Server",
+    "ServerConfig", "TracedPoolSelector", "UniformSelector",
+    "WeightedAverageAggregator", "build", "get", "names", "register",
+    "runtime", "total_uplink_bytes",
 ]

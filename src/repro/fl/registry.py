@@ -171,6 +171,13 @@ def build(name: str, apply_fn, init_params, client_data, config,
 # ---- built-in composition recipes (paper Tables 1-3 / Fig. 3) -----------
 register("composition", "fedentropy",
          Composition(strategy="fedavg", selector="pools", judge="maxent"))
+# fedentropy with the pools driven by a jax.random stream instead of the
+# numpy one: identical Alg. 2 semantics, but the draw is scan-foldable, so
+# engine="scan" runs R>1 rounds per program (histories reproducible per
+# seed, not golden-comparable with the numpy "pools" stream)
+register("composition", "fedentropy-traced",
+         Composition(strategy="fedavg", selector="pools-traced",
+                     judge="maxent"))
 register("composition", "fedavg", Composition(strategy="fedavg"))
 register("composition", "fedprox", Composition(strategy="fedprox"))
 register("composition", "moon", Composition(strategy="moon"))

@@ -148,8 +148,13 @@ class PipelinedServer(Server):
                 self.strategy.client_in_axes(), mesh,
                 donate_data=self.runtime.donate_data,
                 # chain strategies shard whole groups, not devices: the
-                # inner fn's leading axis is the group axis
-                inner=None if make is None else make(self.apply_fn)))
+                # inner fn's leading axis is the group axis and takes the
+                # extra axis-0 validity mask; group-free custom clients
+                # (lmstep) keep the plain five-argument signature
+                inner=None if make is None else make(self.apply_fn),
+                inner_axes=(0,) if getattr(
+                    self.strategy, "prepare_round", None) is not None
+                else ()))
 
     # -------------------------------------------------------- speculation
     def _traced_judge_fn(self):

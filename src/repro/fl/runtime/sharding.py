@@ -77,7 +77,8 @@ def pad_to_multiple(tree, multiple: int):
 
 
 def make_sharded_client_fn(apply_fn: ApplyFn, spec, in_axes, mesh: Mesh,
-                           *, donate_data: bool = True, inner=None):
+                           *, donate_data: bool = True, inner=None,
+                           inner_axes: tuple = (0,)):
     """shard_map'd + jitted ClientUpdate over the ("clients",) mesh axis.
 
     Returns ``fn(global_params, data, prev_p, c_loc, c_glob, ...)`` with
@@ -86,15 +87,20 @@ def make_sharded_client_fn(apply_fn: ApplyFn, spec, in_axes, mesh: Mesh,
     is the strategy's vmap spec; axis-0 arguments shard over the mesh,
     None arguments replicate.
 
-    ``inner`` swaps the vmapped default for a strategy-built fn (FedCAT
-    chains) taking one extra trailing axis-0 array (the chain validity
-    mask). Its leading axis is then the GROUP axis: whole chains shard
-    onto devices, never individual chain stages, and mesh padding repeats
-    whole groups whose (dropped) outputs cannot leak into real chains.
+    ``inner`` swaps the vmapped default for a strategy-built fn.
+    ``inner_axes`` are the vmap axes of any arguments the inner fn takes
+    *beyond* the standard five — the default ``(0,)`` is the FedCAT chain
+    contract (one extra axis-0 chain-validity mask; the inner fn's
+    leading axis is then the GROUP axis: whole chains shard onto devices,
+    never individual chain stages, and mesh padding repeats whole groups
+    whose (dropped) outputs cannot leak into real chains); strategies
+    whose ``make_client_fn`` keeps the plain five-argument client
+    signature (the LM window rule) pass ``()``.
     """
     vm = inner if inner is not None else _make_client_fn(apply_fn, spec,
                                                          in_axes)
-    axes = tuple(in_axes) + ((0,) if inner is not None else ())
+    axes = tuple(in_axes) + (tuple(inner_axes) if inner is not None
+                             else ())
     n = mesh.shape[CLIENT_AXIS]
     in_specs = tuple(P(CLIENT_AXIS) if ax == 0 else P() for ax in axes)
     mapped = shard_map(vm, mesh=mesh, in_specs=in_specs,

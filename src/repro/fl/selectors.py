@@ -7,6 +7,15 @@
                       ``use_pools=False`` ablation of Fig. 3b). Seeded with
                       ``seed + 1`` by the registry to match the legacy
                       trainer's RNG stream exactly.
+``TracedPoolSelector`` — the same eps-greedy pool semantics driven by a
+                      ``jax.random`` stream (``core.pools.pools_draw`` /
+                      ``pools_refile``), so the draw can ALSO run inside
+                      the scan engine's ``lax.scan`` as a device-resident
+                      carry: ``engine="scan"`` folds R>1 rounds of the
+                      paper's fedentropy composition instead of falling
+                      back to sequential rounds. Not RNG-stream-compatible
+                      with the numpy ``PoolSelector`` (histories are
+                      reproducible per seed, not golden-comparable).
 ``CatGrouper``      — FedCAT (arXiv 2202.12751) device grouping layered
                       over an inner selector: WHO trains is delegated, and
                       the selection is additionally packed into ordered
@@ -35,8 +44,12 @@ from typing import Sequence
 
 import numpy as np
 
+import jax
+import jax.numpy as jnp
+
 from ..core.pools import (
     DevicePools, greedy_entropy_groups, hist_entropy, label_histograms,
+    pools_draw,
 )
 from ..data.corpus import DataQueue
 from .registry import register
@@ -79,6 +92,87 @@ class PoolSelector:
 
     def stats(self) -> dict:
         return self.pools.stats()
+
+
+@register("selector", "pools-traced")
+class TracedPoolSelector:
+    """Epsilon-greedy pools on a ``jax.random`` stream — the scan-foldable
+    twin of :class:`PoolSelector`.
+
+    Selection semantics are the paper's (Alg. 2 lines 4-8/22: eps-greedy
+    pool pick with spillover, cohort removed for the round, re-filed by
+    verdict), but the draw is the pure jitted
+    :func:`repro.core.pools.pools_draw` over (key, membership masks) —
+    state the scan engine can carry on device through an R-round
+    ``lax.scan``. Sequentially, :meth:`select`/:meth:`update` drive the
+    identical jitted program one round at a time, so a folded block and
+    the sequential ``Server`` produce bit-for-bit equal selection streams.
+
+    The scan engine's fold surface:
+
+    * :meth:`fold_carry` — the (key, pos_mask, neg_mask) device carry a
+      block starts from;
+    * :meth:`fold_drawn` — mirror one in-scan draw (cohort leaves the
+      pools, the post-draw key is adopted); the engine then confirms the
+      round with a normal :meth:`update`, exactly the sequential
+      select/update cycle.
+    """
+
+    def __init__(self, num_clients: int, eps: float = 0.8, seed: int = 0):
+        self.num_clients = int(num_clients)
+        self.eps = float(eps)
+        self._key = jax.random.PRNGKey(seed)
+        self.positive: set[int] = set(range(self.num_clients))
+        self.negative: set[int] = set()
+
+    @classmethod
+    def from_config(cls, config, local):
+        return cls(config.num_clients, config.eps, config.seed)
+
+    # ---- membership masks (the device representation) -------------------
+    def _masks(self) -> tuple[jax.Array, jax.Array]:
+        pos = np.zeros(self.num_clients, np.float32)
+        neg = np.zeros(self.num_clients, np.float32)
+        pos[sorted(self.positive)] = 1.0
+        neg[sorted(self.negative)] = 1.0
+        return jnp.asarray(pos), jnp.asarray(neg)
+
+    def select(self, num: int) -> list[int]:
+        num = min(num, self.num_clients)
+        pos, neg = self._masks()
+        sel, self._key = pools_draw(self._key, pos, neg,
+                                    num=num, eps=self.eps)
+        chosen = [int(c) for c in np.asarray(sel)]
+        for c in chosen:            # removed for the round, like DevicePools
+            self.positive.discard(c)
+            self.negative.discard(c)
+        return chosen
+
+    def update(self, positives: Sequence[int],
+               negatives: Sequence[int]) -> None:
+        self.positive.update(int(i) for i in positives)
+        self.negative.update(int(i) for i in negatives)
+
+    # ---- scan-engine fold surface ---------------------------------------
+    def fold_carry(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """(key, pos_mask, neg_mask) for the scan carry — the exact state
+        the next sequential :meth:`select` would draw from."""
+        pos, neg = self._masks()
+        return self._key, pos, neg
+
+    def fold_drawn(self, sel, key_after) -> None:
+        """Mirror an in-scan draw the engine confirmed (or is about to
+        replay eagerly): the cohort leaves both pools and the selector's
+        key advances to the post-draw key stacked in the scan's ys."""
+        for c in np.asarray(sel):
+            self.positive.discard(int(c))
+            self.negative.discard(int(c))
+        self._key = jnp.asarray(key_after)
+
+    def stats(self) -> dict:
+        return {"selector": "pools-traced",
+                "positive": len(self.positive),
+                "negative": len(self.negative)}
 
 
 @register("selector", "uniform")

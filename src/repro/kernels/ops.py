@@ -68,9 +68,12 @@ def entropy_judge_sweep(soft_labels, sizes, mask, *, backend=None):
     return ref.entropy_judge_sweep_reference(soft_labels, sizes, mask)
 
 
-def masked_weighted_sum(flat, weights, *, backend=None):
+def masked_weighted_sum(flat, weights, *, backend=None, block_p=2048,
+                        vmem_budget_bytes=4 * 1024 * 1024):
     backend = backend or _DEFAULT
     if backend == "pallas":
         from .fused_aggregate import masked_weighted_sum
-        return masked_weighted_sum(flat, weights, interpret=_INTERPRET)
+        return masked_weighted_sum(
+            flat, weights, block_p=block_p,
+            vmem_budget_bytes=vmem_budget_bytes, interpret=_INTERPRET)
     return ref.masked_weighted_sum_reference(flat, weights)

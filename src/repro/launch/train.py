@@ -30,6 +30,13 @@ via ``--reduced``. Example:
       --steps 20 --clients 8 --case case1 --mesh host
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
       --engine pipelined --speculate --steps 10
+
+LM quickstart (the scan engine at LM scale — eps-greedy pools folded on
+device, O(cohort x vocab) stacked bytes per round via remat):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+      --engine scan --rounds-per-scan 4 --params-mode remat \
+      --selector pools-traced --lm-objective window --steps 8
 """
 from __future__ import annotations
 
@@ -104,6 +111,28 @@ def _components(args, *, host_oracle: bool):
     return config, selector, judge
 
 
+def lm_window_apply(model, cfg):
+    """Adapter: (params, x:(B, L+1) tokens) -> ((B, L, V) next-token
+    logits for targets ``x[:, 1:]``, feats) — the full-window LM contract
+    :class:`repro.fl.LMWindowStrategy` (``--lm-objective window``)
+    consumes. Every position trains, not just the final token; the soft
+    label becomes the weighted mean next-token distribution over all
+    positions (paper Eq. 2, LM analog)."""
+    def apply_fn(params, x):
+        batch = {"tokens": x[:, :-1]}
+        b = x.shape[0]
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (b, cfg.num_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        logits, _ = model.forward(params, batch)
+        logits = logits.astype(jnp.float32)
+        return logits, logits[:, -1, :]
+    return apply_fn
+
+
 def lm_client_apply(model, cfg):
     """Adapter: (params, x:(B, L) tokens) -> (next-token logits, feats) so
     the weights-level ``Server``/``client_update`` machinery drives an LM.
@@ -163,7 +192,8 @@ def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
                 "speculates every in-scan verdict already (the float64 "
                 "oracle replays each R-round block)")
         runtime = fl.ScanConfig(rounds_per_scan=args.rounds_per_scan,
-                                spec_backend=args.judge_backend)
+                                spec_backend=args.judge_backend,
+                                params_mode=args.params_mode)
     else:
         runtime = fl.RuntimeConfig(speculate=args.speculate,
                                    spec_backend=args.judge_backend)
@@ -181,12 +211,20 @@ def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
         composition = "fedavg" if args.no_fedentropy else "fedentropy"
         if args.no_fedentropy:
             judge = None
+    window = args.lm_objective == "window"
+    if window and args.method:
+        raise SystemExit(
+            f"--lm-objective window swaps the client strategy for lmstep; "
+            f"--method {args.method} composes its own strategy axis — "
+            "drop one of the two")
+    apply_fn = (lm_window_apply if window else lm_client_apply)(model, cfg)
     server = fl.build(
-        composition, lm_client_apply(model, cfg), model.init(
+        composition, apply_fn, model.init(
             jax.random.PRNGKey(args.seed)), data, config,
         fl.LocalSpec(epochs=args.local_epochs, lr=args.lr,
                      batch_size=args.per_client_batch),
-        selector=selector, judge=judge,
+        selector=selector, strategy="lmstep" if window else None,
+        judge=judge,
         engine=args.engine, runtime=runtime, data_plane=args.data_plane)
     if args.dryrun:
         rep = server.corpus.memory_report()
@@ -315,7 +353,22 @@ def main() -> None:
                          "into one lax.scan program)")
     ap.add_argument("--rounds-per-scan", type=int, default=4,
                     help="scan engine: rounds folded per jitted scan "
-                         "block (needs --selector uniform to fold >1)")
+                         "block (needs --selector uniform or "
+                         "pools-traced to fold >1)")
+    ap.add_argument("--params-mode", default="stack",
+                    choices=["stack", "remat"],
+                    help="scan engine rewind points: stack keeps R "
+                         "post-round param copies in the scan's ys, "
+                         "remat re-runs confirmed rounds on a mismatch "
+                         "— O(cohort*vocab) stacked bytes per round, "
+                         "the LM-scale mode")
+    ap.add_argument("--lm-objective", default="last-token",
+                    choices=["last-token", "window"],
+                    help="server engines: last-token treats each window "
+                         "as a classification sample (final token is "
+                         "the label); window trains every next-token "
+                         "position via the lmstep strategy (the LM "
+                         "fine-tune objective)")
     ap.add_argument("--buffer-size", type=int, default=0,
                     help="async engine: screened arrivals per flush "
                          "(0 = cohort size, the reduction case)")
@@ -327,10 +380,12 @@ def main() -> None:
                     help="async engine: simulated per-client arrival "
                          "latency model (seeded, virtual time)")
     ap.add_argument("--selector", default="pools",
-                    choices=["pools", "uniform", "queue"],
+                    choices=["pools", "pools-traced", "uniform", "queue"],
                     help="repro.fl Selector driving client admission "
-                         "(queue = entropy-ranked dynamic data queues, "
-                         "stats bound from the server's ClientCorpus)")
+                         "(pools-traced = the paper's eps-greedy pools "
+                         "on a jax.random stream, scan-foldable; queue "
+                         "= entropy-ranked dynamic data queues, stats "
+                         "bound from the server's ClientCorpus)")
     ap.add_argument("--judge", default="maxent", choices=["maxent", "none"],
                     help="repro.fl Judge axis (both engines)")
     ap.add_argument("--judge-backend", default="xla",

@@ -182,6 +182,111 @@ def test_scan_forced_mismatch_truncates_and_replays(tiny):
             assert r["negative"], "only rejection rounds can misspeculate"
 
 
+# ------------------------------------------------- remat memory mode
+
+@pytest.mark.parametrize("R", [1, 4])
+def test_scan_remat_matches_stack_and_sequential(tiny, R):
+    """ISSUE acceptance: params_mode="remat" histories are bit-for-bit
+    both params_mode="stack" and the sequential Server under a
+    forced-mismatch judge — the rematerialized rewind point must be the
+    exact params the stacked ys would have held."""
+    data, params = tiny
+    seq = fl.build("fedentropy", cnn.apply, params, data,
+                   fl.ServerConfig(num_clients=8, participation=0.5,
+                                   seed=0),
+                   LocalSpec(epochs=1, batch_size=20),
+                   selector="uniform")
+    engines = {}
+    for mode in ("stack", "remat"):
+        engines[mode] = _build(
+            tiny, "fedentropy",
+            runtime=ScanConfig(rounds_per_scan=R, params_mode=mode),
+            selector="uniform", judge=_WrongScanJudge())
+        assert engines[mode].scan_rounds() == R
+    for _ in range(8):
+        seq.round()
+        for s in engines.values():
+            s.round()
+    for s in engines.values():
+        _assert_records_equal(s.history, seq.history)
+    if R > 1:
+        # the forced-mismatch judge really exercised the rewind path
+        assert any(not r["spec_hit"] for r in engines["remat"].history)
+    # stack and remat must agree bitwise, not merely to tolerance
+    for a, b in zip(jax.tree.leaves(engines["stack"].global_params),
+                    jax.tree.leaves(engines["remat"].global_params)):
+        assert bool(jnp.all(a == b))
+    assert _params_digest(engines["remat"].global_params) == pytest.approx(
+        _params_digest(seq.global_params), rel=DIGEST_REL)
+
+
+def test_scan_remat_ys_carry_no_params(tiny):
+    """The remat block's stacked ys hold only O(cohort x classes) verdict
+    inputs — no params leaf — so device memory per block is independent
+    of the model size (stack mode pins R post-round param copies)."""
+    stack = _build(tiny, runtime=ScanConfig(rounds_per_scan=4,
+                                            params_mode="stack"))
+    remat = _build(tiny, runtime=ScanConfig(rounds_per_scan=4,
+                                            params_mode="remat"))
+    s_shapes = stack.block_ys_shapes(4)
+    r_shapes = remat.block_ys_shapes(4)
+    assert "params" in s_shapes
+    assert "params" not in r_shapes
+    from repro.core.aggregation import tree_bytes
+    params_nbytes = tree_bytes(stack.global_params)
+    assert remat.stacked_ys_nbytes(4) < params_nbytes
+    assert (stack.stacked_ys_nbytes(4) - remat.stacked_ys_nbytes(4)
+            == 4 * params_nbytes)
+
+
+# ------------------------------------------------------ traced pool carry
+
+def test_scan_pools_traced_folds_bit_for_bit(tiny):
+    """The paper's fedentropy composition with selector="pools-traced"
+    folds R=4 (no fallback) and reproduces the sequential Server's
+    history and params exactly — including through a forced mismatch,
+    which must truncate and rebuild the pool carry."""
+    data, params = tiny
+    seq = fl.build("fedentropy", cnn.apply, params, data,
+                   fl.ServerConfig(num_clients=8, participation=0.5,
+                                   seed=0),
+                   LocalSpec(epochs=1, batch_size=20),
+                   selector="pools-traced")
+    for _ in range(8):
+        seq.round()
+    for mode in ("stack", "remat"):
+        for judge in (None, _WrongScanJudge()):
+            scan = _build(
+                tiny, "fedentropy",
+                runtime=ScanConfig(rounds_per_scan=4, params_mode=mode),
+                selector="pools-traced",
+                **({} if judge is None else {"judge": judge}))
+            assert scan.scan_rounds() == 4
+            assert scan.stats()["fallback_reasons"] == []
+            assert scan.stats()["pool_fold"] is True
+            for _ in range(8):
+                scan.round()
+            _assert_records_equal(scan.history, seq.history)
+            assert _params_digest(scan.global_params) == pytest.approx(
+                _params_digest(seq.global_params), rel=DIGEST_REL)
+            if judge is not None:
+                assert any(not r["spec_hit"] for r in scan.history)
+
+
+def test_scan_pools_traced_matches_composition_alias(tiny):
+    """The "fedentropy-traced" composition is fedentropy with the traced
+    pools — same stream as the explicit selector override."""
+    a = _build(tiny, "fedentropy-traced",
+               runtime=ScanConfig(rounds_per_scan=4))
+    b = _build(tiny, "fedentropy", runtime=ScanConfig(rounds_per_scan=4),
+               selector="pools-traced")
+    assert a.scan_rounds() == b.scan_rounds() == 4
+    for _ in range(8):
+        a.round()
+        b.round()
+    _assert_records_equal(a.history, b.history)
+
+
 # ---------------------------------------------------- eligibility fallback
 
 def test_scan_pools_falls_back_to_sequential(tiny, caplog):
@@ -213,6 +318,46 @@ def test_scan_stateful_strategy_falls_back(tiny):
     server = _build(tiny, "scaffold",
                     runtime=ScanConfig(rounds_per_scan=4))
     assert server.scan_rounds() == 1
+
+
+@pytest.mark.parametrize("name,code,component", [
+    ("fedentropy", "verdict-coupled-selector", "PoolSelector"),
+    ("fedentropy+queue", "verdict-coupled-selector", "QueueSelector"),
+    ("scaffold", "stateful-strategy", "ScaffoldStrategy"),
+    ("fedcat", "group-dispatch", "CatChainStrategy"),
+])
+def test_scan_fallback_reason_codes(tiny, name, code, component):
+    """Every non-foldable composition reports WHY it fell back, machine
+    readably: ``fallback_reasons`` dicts with a stable ``code``, the
+    offending component class, and prose detail — mirrored in
+    ``stats()`` and, per round, on the history record."""
+    server = _build(tiny, name, runtime=ScanConfig(rounds_per_scan=4))
+    assert server.scan_rounds() == 1
+    reasons = server.fallback_reasons
+    assert reasons, name
+    by_code = {r["code"]: r for r in reasons}
+    assert code in by_code
+    assert by_code[code]["component"] == component
+    assert by_code[code]["detail"]
+    assert server.stats()["fallback_reasons"] == reasons
+    rec = server.round()
+    assert rec["scan_fallback"] == [r["code"] for r in reasons]
+    assert code in rec["scan_fallback"]
+
+
+def test_scan_foldable_composition_reports_no_reasons(tiny):
+    """Foldable compositions report an empty reason list — and their
+    (folded) records carry no ``scan_fallback`` key."""
+    server = _build(tiny, "fedavg",
+                    runtime=ScanConfig(rounds_per_scan=4))
+    assert server.scan_rounds() == 4
+    assert server.fallback_reasons == []
+    assert "scan_fallback" not in server.round()
+
+
+def test_scan_config_rejects_bad_params_mode():
+    with pytest.raises(ValueError, match="params_mode"):
+        ScanConfig(rounds_per_scan=4, params_mode="checkpoint")
 
 
 # --------------------------------------------------- device-mode selection

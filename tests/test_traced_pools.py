@@ -1,0 +1,227 @@
+"""The traced eps-greedy pools (``core.pools``) and their selector
+(``pools-traced``): draw semantics (pool pick, spillover, removal),
+verdict re-filing, host-selector vs raw-jitted-stream equality (the
+invariant the scan engine's pool fold rests on), the fold surface, and
+an ``lmstep`` client-rule smoke."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.fl as fl
+from repro.core.pools import pools_draw, pools_refile
+from repro.core.strategies import LocalSpec
+from repro.fl.selectors import TracedPoolSelector
+
+N = 10
+
+
+def _masks(pos_ids, n=N):
+    pos = np.zeros(n, np.float32)
+    pos[list(pos_ids)] = 1.0
+    return jnp.asarray(pos), jnp.asarray(1.0 - pos)
+
+
+# ------------------------------------------------------------ pools_draw
+
+def test_draw_eps_one_stays_in_positive_pool():
+    pos, neg = _masks(range(6))
+    for seed in range(8):
+        sel, _ = pools_draw(jax.random.PRNGKey(seed), pos, neg,
+                            num=4, eps=1.0)
+        assert set(np.asarray(sel).tolist()) <= set(range(6))
+
+
+def test_draw_eps_zero_stays_in_negative_pool():
+    pos, neg = _masks(range(6))          # negatives are 6..9
+    for seed in range(8):
+        sel, _ = pools_draw(jax.random.PRNGKey(seed), pos, neg,
+                            num=4, eps=0.0)
+        assert set(np.asarray(sel).tolist()) <= {6, 7, 8, 9}
+
+
+def test_draw_spills_into_other_pool():
+    """Sec. 3.4: a too-small chosen pool contributes ALL its members and
+    the remainder comes from the other pool."""
+    pos, neg = _masks({1, 4})
+    for seed in range(8):
+        sel, _ = pools_draw(jax.random.PRNGKey(seed), pos, neg,
+                            num=5, eps=1.0)
+        chosen = set(np.asarray(sel).tolist())
+        assert len(chosen) == 5           # no repeats: without replacement
+        assert {1, 4} <= chosen           # whole positive pool first
+
+
+def test_draw_is_deterministic_and_advances_key():
+    pos, neg = _masks(range(5))
+    key = jax.random.PRNGKey(0)
+    sel_a, key_a = pools_draw(key, pos, neg, num=3, eps=0.8)
+    sel_b, key_b = pools_draw(key, pos, neg, num=3, eps=0.8)
+    assert np.array_equal(np.asarray(sel_a), np.asarray(sel_b))
+    assert np.array_equal(np.asarray(key_a), np.asarray(key_b))
+    assert not np.array_equal(np.asarray(key_a), np.asarray(key))
+
+
+# ---------------------------------------------------------- pools_refile
+
+def test_refile_moves_cohort_by_verdict_only():
+    pos, neg = _masks(range(6))
+    sel = jnp.asarray([2, 7, 5], jnp.int32)
+    admitted = jnp.asarray([1.0, 1.0, 0.0])
+    new_pos, new_neg = pools_refile(pos, neg, sel, admitted)
+    new_pos, new_neg = np.asarray(new_pos), np.asarray(new_neg)
+    # cohort re-filed by verdict: 2,7 -> positive, 5 -> negative
+    assert new_pos[2] == 1.0 and new_neg[2] == 0.0
+    assert new_pos[7] == 1.0 and new_neg[7] == 0.0
+    assert new_pos[5] == 0.0 and new_neg[5] == 1.0
+    # everyone else untouched
+    rest = [i for i in range(N) if i not in (2, 7, 5)]
+    assert np.array_equal(new_pos[rest], np.asarray(pos)[rest])
+    assert np.array_equal(new_neg[rest], np.asarray(neg)[rest])
+    # membership stays a partition
+    assert np.array_equal(new_pos + new_neg, np.ones(N, np.float32))
+
+
+# ------------------------------------------------- TracedPoolSelector
+
+def test_selector_matches_raw_jitted_stream():
+    """The invariant the scan fold rests on: the host selector's
+    select/update cycle IS pools_draw/pools_refile on the same key
+    chain — bit-for-bit, many rounds."""
+    sel_host = TracedPoolSelector(N, eps=0.8, seed=3)
+    key = jax.random.PRNGKey(3)
+    pos, neg = _masks(range(N))
+    for r in range(12):
+        chosen = sel_host.select(4)
+        raw, key = pools_draw(key, pos, neg, num=4, eps=0.8)
+        assert chosen == [int(c) for c in np.asarray(raw)]
+        admitted = jnp.asarray([(r + i) % 2 for i in range(4)], jnp.float32)
+        pos, neg = pools_refile(pos, neg, raw, admitted)
+        pos_ids = [c for i, c in enumerate(chosen) if (r + i) % 2]
+        neg_ids = [c for i, c in enumerate(chosen) if not (r + i) % 2]
+        sel_host.update(pos_ids, neg_ids)
+        hpos, hneg = sel_host._masks()
+        assert np.array_equal(np.asarray(hpos), np.asarray(pos))
+        assert np.array_equal(np.asarray(hneg), np.asarray(neg))
+
+
+def test_selector_select_removes_cohort_until_update():
+    sel = TracedPoolSelector(N, eps=0.8, seed=0)
+    chosen = sel.select(4)
+    assert len(chosen) == len(set(chosen)) == 4
+    assert sel.positive.isdisjoint(chosen)
+    assert sel.negative.isdisjoint(chosen)
+    sel.update(chosen[:1], chosen[1:])
+    assert set(chosen[:1]) <= sel.positive
+    assert set(chosen[1:]) <= sel.negative
+
+
+def test_fold_drawn_mirrors_select():
+    """fold_drawn(sel, key_after) leaves the selector in exactly the
+    state select() would have."""
+    a = TracedPoolSelector(N, eps=0.8, seed=7)
+    b = TracedPoolSelector(N, eps=0.8, seed=7)
+    for _ in range(4):
+        key, pos, neg = b.fold_carry()
+        raw, key_after = pools_draw(key, pos, neg, num=4, eps=0.8)
+        chosen = a.select(4)
+        b.fold_drawn(raw, key_after)
+        assert chosen == [int(c) for c in np.asarray(raw)]
+        assert a.positive == b.positive and a.negative == b.negative
+        assert np.array_equal(np.asarray(a._key), np.asarray(b._key))
+        a.update(chosen[:2], chosen[2:])
+        b.update(chosen[:2], chosen[2:])
+
+
+def test_selector_registered_and_stats():
+    sel = fl.get("selector", "pools-traced")(N, eps=0.5, seed=0)
+    assert isinstance(sel, TracedPoolSelector)
+    s = sel.stats()
+    assert s["selector"] == "pools-traced"
+    assert s["positive"] == N and s["negative"] == 0
+
+
+# ------------------------------------------------------- lmstep strategy
+
+def _toy_lm_apply(params, x):
+    h = params["emb"][x[:, :-1]]              # (S, L, d)
+    logits = h @ params["out"]                # (S, L, V)
+    return logits, h[:, -1, :]
+
+
+def test_lmstep_client_soft_label_is_distribution():
+    V, d, S, L = 11, 5, 6, 4
+    rng = np.random.default_rng(0)
+    params = {"emb": jnp.asarray(rng.normal(size=(V, d)), jnp.float32),
+              "out": jnp.asarray(rng.normal(size=(d, V)), jnp.float32)}
+    strat = fl.LMWindowStrategy(
+        LocalSpec(lr=0.1, momentum=0.5, epochs=2, batch_size=3))
+    assert strat.name == "lmstep"
+    assert getattr(strat, "prepare_round", None) is None
+    client = jax.jit(strat.make_client_fn(_toy_lm_apply))
+    x = jnp.asarray(rng.integers(0, V, size=(2, S, L + 1)), jnp.int32)
+    w = jnp.asarray([[1, 1, 1, 1, 0, 0], [1, 1, 1, 1, 1, 1]], jnp.float32)
+    out = client(params, {"x": x, "w": w}, None, None, None)
+    assert out["soft_label"].shape == (2, V)
+    assert out["params"]["emb"].shape == (2, V, d)
+    np.testing.assert_allclose(np.asarray(out["size"]),
+                               [4.0, 6.0], rtol=1e-6)
+    # Eq. 2 LM analog: a weighted mean of softmax rows sums to one
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(out["soft_label"], -1)), [1.0, 1.0], atol=1e-5)
+    # training moved the params
+    assert float(jnp.max(jnp.abs(out["params"]["out"][0]
+                                 - params["out"]))) > 0.0
+
+
+def test_lmstep_padded_windows_do_not_train():
+    """Zero-weight (padded) windows contribute neither gradient nor soft
+    label: appending them changes nothing."""
+    V, d, S, L = 7, 4, 4, 3
+    rng = np.random.default_rng(1)
+    params = {"emb": jnp.asarray(rng.normal(size=(V, d)), jnp.float32),
+              "out": jnp.asarray(rng.normal(size=(d, V)), jnp.float32)}
+    strat = fl.LMWindowStrategy(
+        LocalSpec(lr=0.1, momentum=0.0, epochs=1, batch_size=8))
+    client = strat.make_client_fn(_toy_lm_apply)
+    x = jnp.asarray(rng.integers(0, V, size=(1, S, L + 1)), jnp.int32)
+    w = jnp.ones((1, S), jnp.float32)
+    xp = jnp.concatenate([x, jnp.zeros((1, 2, L + 1), jnp.int32)], axis=1)
+    wp = jnp.concatenate([w, jnp.zeros((1, 2), jnp.float32)], axis=1)
+    a = client(params, {"x": x, "w": w}, None, None, None)
+    b = client(params, {"x": xp, "w": wp}, None, None, None)
+    np.testing.assert_allclose(np.asarray(a["soft_label"]),
+                               np.asarray(b["soft_label"]), atol=1e-6)
+    for la, lb in zip(jax.tree.leaves(a["params"]),
+                      jax.tree.leaves(b["params"])):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a["size"]),
+                               np.asarray(b["size"]))
+
+
+def test_lmstep_folds_under_scan():
+    """lmstep is stateless with no group dispatch: fedentropy-traced +
+    lmstep folds R>1 (the LM composition the example runs)."""
+    V, d, S, L, C = 7, 4, 4, 3, 4
+    rng = np.random.default_rng(2)
+    params = {"emb": jnp.asarray(rng.normal(size=(V, d)), jnp.float32),
+              "out": jnp.asarray(rng.normal(size=(d, V)), jnp.float32)}
+    x = jnp.asarray(rng.integers(0, V, size=(C, S, L + 1)), jnp.int32)
+    data = {"x": x, "y": x[:, :, -1],
+            "w": jnp.ones((C, S), jnp.float32)}
+    server = fl.build(
+        "fedentropy-traced", _toy_lm_apply, params, data,
+        fl.ServerConfig(num_clients=C, participation=0.5, seed=0),
+        LocalSpec(lr=0.1, momentum=0.0, epochs=1, batch_size=4),
+        strategy="lmstep", engine="scan",
+        runtime=fl.ScanConfig(rounds_per_scan=2, params_mode="remat"))
+    assert server.scan_rounds() == 2
+    assert server.fallback_reasons == []
+    rec = server.round()
+    assert rec["selected"] and "scan_fallback" not in rec
+    assert np.isfinite(rec["entropy"]) or np.isnan(rec["entropy"])
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
