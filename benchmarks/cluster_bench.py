@@ -1,0 +1,184 @@
+"""Clustered FL under drift: per-cluster accuracy vs a single center.
+
+Three sequential drivers on the synthetic corpus with one seeded drift
+event halfway through training (half the clients re-partitioned):
+
+  * ``fedentropy``   — the paper's single-center run: one global model
+                       absorbs both the pre- and post-drift populations;
+  * ``ifca_maxent``  — K=3 ``ModelBank``, IFCA loss-argmin assignment
+                       recomputed every round, max-entropy judgment and
+                       aggregation per cluster;
+  * ``fesem``        — K=3 sticky weight-distance assignment (FeSEM).
+
+Each driver trains the same number of rounds over the same drift
+schedule; the blob records test accuracy at every eval point — for the
+clustered drivers both per-center and best-center — plus per-round
+cluster occupancy and wall-clock. ``clustered_best_ge_single`` reports
+whether the best bank center matches or beats the single-center run
+after drift (informational, not a hard gate: at smoke scale the tiny
+corpus is noisy).
+
+Smoke mode (CI): 8 clients / 4 classes / 6 rounds, drift at round 2,
+artifact written to ``BENCH_cluster.json``:
+
+  PYTHONPATH=src python -m benchmarks.cluster_bench --smoke \
+      --out BENCH_cluster.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.data.partition import drift_schedule, partition, stack_clients
+from repro.data.synthetic import make_image_dataset
+from repro.fl.runtime import (
+    disable_process_cache, enable_process_cache, process_cache,
+)
+from repro.models import cnn
+
+# name -> (composition, num_clusters)
+DRIVERS = {
+    "fedentropy": ("fedentropy", 1),
+    "ifca_maxent": ("ifca+maxent", 3),
+    "fesem": ("fesem", 3),
+}
+
+
+def make_setup(num_clients: int, classes: int, hw: int, seed: int):
+    """Raw x/y kept alongside the stacked corpus: ``drift_schedule``
+    re-partitions from the full training pool, not the stacked rows."""
+    (xtr, ytr), (xte, yte) = make_image_dataset(
+        num_classes=classes, train_per_class=60 if num_clients <= 8
+        else 96, test_per_class=25, hw=hw, noise=1.0, seed=seed)
+    parts = partition("case1", ytr, num_clients, classes, seed=seed)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=20)
+    params = cnn.init(jax.random.PRNGKey(seed), image_hw=hw,
+                      num_classes=classes)
+    return (xtr, ytr), data, params, (jnp.asarray(xte), jnp.asarray(yte))
+
+
+def _accuracies(server, xte, yte, k: int) -> dict:
+    """Per-center + best accuracy (a single-center server reports one)."""
+    per = [float(server.evaluate(xte, yte, center=c)["accuracy"])
+           for c in range(k)]
+    return {"per_center": per, "best": max(per)}
+
+
+def run_driver(name: str, setup, *, num_clients: int, classes: int,
+               rounds: int, drift_at: int, participation: float,
+               local: LocalSpec, eval_every: int) -> dict:
+    (xtr, ytr), data, params, (xte, yte) = setup
+    comp, k = DRIVERS[name]
+    drift = drift_schedule(
+        xtr, ytr, num_clients, classes, at=drift_at, seed=0,
+        samples_per_client=int(data["y"].shape[1]))
+    server = fl.build(
+        comp, cnn.apply, params, dict(data),
+        fl.ServerConfig(num_clients=num_clients,
+                        participation=participation, seed=0,
+                        num_clusters=k),
+        local, drift=drift)
+    evals, occupancy = [], []
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        rec = server.round()
+        if "cluster" in rec:
+            occupancy.append(np.bincount(
+                rec["cluster"], minlength=k).tolist())
+        if (r + 1) % eval_every == 0 or r + 1 == rounds:
+            evals.append({"round": r, "post_drift": r >= drift_at,
+                          **_accuracies(server, xte, yte, k)})
+    jax.block_until_ready(server.global_params)
+    wall = time.perf_counter() - t0
+    hist = server.history
+    return {
+        "driver": name, "composition": comp, "num_clusters": k,
+        "rounds": rounds, "drift_round": drift_at, "wall_s": wall,
+        "s_per_round": wall / rounds, "evals": evals,
+        "final_acc_best": evals[-1]["best"],
+        "final_acc_per_center": evals[-1]["per_center"],
+        "occupancy": occupancy,
+        "admitted": sum(len(h["positive"]) for h in hist),
+        "rejected": sum(len(h["negative"]) for h in hist),
+        "total_bytes": sum(h["comm"]["total_bytes"] for h in hist),
+    }
+
+
+def run(fast: bool = False, smoke: bool = False):
+    """Benchmark-harness entry: returns (csv_rows, json_blob)."""
+    if smoke:
+        num_clients, classes, hw = 8, 4, 16
+        rounds, drift_at, eval_every = 6, 2, 3
+        participation, local = 0.5, LocalSpec(epochs=1, batch_size=20)
+    elif fast:
+        num_clients, classes, hw = 16, 6, 16
+        rounds, drift_at, eval_every = 10, 5, 5
+        participation, local = 0.25, LocalSpec(epochs=1, batch_size=24)
+    else:
+        # the paper scale the ISSUE names: N=100 clients, drift halfway
+        num_clients, classes, hw = 100, 10, 16
+        rounds, drift_at, eval_every = 20, 10, 5
+        participation, local = 0.1, LocalSpec(epochs=2, batch_size=24)
+
+    setup = make_setup(num_clients, classes, hw, seed=0)
+    enable_process_cache(maxsize=32)
+    try:
+        results = [run_driver(name, setup, num_clients=num_clients,
+                              classes=classes, rounds=rounds,
+                              drift_at=drift_at,
+                              participation=participation, local=local,
+                              eval_every=eval_every)
+                   for name in DRIVERS]
+        cache_stats = process_cache().stats()
+    finally:
+        disable_process_cache()
+
+    by_name = {r["driver"]: r for r in results}
+    single = by_name["fedentropy"]["final_acc_best"]
+    rows = []
+    for r in results:
+        rows.append((f"cluster_{r['driver']}",
+                     f"{r['s_per_round'] * 1e6:.0f}",
+                     f"{r['final_acc_best']:.4f}acc/K{r['num_clusters']}"))
+    blob = {"results": results, "compile_cache": cache_stats,
+            "num_clients": num_clients, "classes": classes,
+            "rounds": rounds, "drift_round": drift_at,
+            "participation": participation,
+            "single_center_final_acc": single,
+            "clustered_best_ge_single": any(
+                r["final_acc_best"] >= single for r in results
+                if r["num_clusters"] > 1),
+            "devices": len(jax.devices()),
+            "backend": jax.default_backend()}
+    return rows, blob
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: 8 clients, 6 rounds, drift at 2")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="",
+                    help="write the JSON blob here (BENCH_cluster.json)")
+    args = ap.parse_args()
+    rows, blob = run(fast=args.fast, smoke=args.smoke)
+    print("name,us_per_round,derived")
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)
+    print("clustered best >= single after drift:",
+          blob["clustered_best_ge_single"])
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(blob, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

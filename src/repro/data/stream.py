@@ -88,7 +88,8 @@ class HostCorpus(Mapping):
     plane = "streaming"
 
     def __init__(self, arrays: dict, *, transform: Normalize | None = None,
-                 stats_chunk: int = STATS_CHUNK_CLIENTS):
+                 stats_chunk: int = STATS_CHUNK_CLIENTS,
+                 prefetch_depth: int = 1):
         if not arrays:
             raise ValueError("HostCorpus needs at least one array")
         n = {k: np.shape(v)[0] for k, v in arrays.items()}
@@ -96,6 +97,9 @@ class HostCorpus(Mapping):
             raise ValueError(f"client axes disagree: {n}")
         self._arrays = {k: _host_array(v) for k, v in arrays.items()}
         self.transform = transform
+        self.prefetch_depth = int(prefetch_depth)
+        if self.prefetch_depth < 1:
+            raise ValueError("prefetch depth must be >= 1")
         self._mesh = None
         self._n = int(next(iter(self._arrays.values())).shape[0])
         self._stats_chunk = max(1, int(stats_chunk))
@@ -320,9 +324,11 @@ class HostCorpus(Mapping):
     # ------------------------------------------------------------ data plane
     def prefetcher(self) -> "CohortPrefetcher":
         """The (lazily created) background prefetcher; :meth:`prefetch`
-        and :meth:`cohort` route through it."""
+        and :meth:`cohort` route through it. ``prefetch_depth`` (a
+        construction knob, default 1) sets how many predicted cohorts may
+        stage ahead — 1 is the classic double-buffered single-slot."""
         if self._prefetcher is None:
-            self._prefetcher = CohortPrefetcher(self)
+            self._prefetcher = CohortPrefetcher(self, self.prefetch_depth)
         return self._prefetcher
 
     def prefetch(self, idx, active=None) -> None:
@@ -394,26 +400,35 @@ def _key(idx: np.ndarray, active: np.ndarray | None) -> tuple:
 
 
 class CohortPrefetcher:
-    """Double-buffered background staging of the next cohort's upload.
+    """Ring-buffered background staging of upcoming cohort uploads.
 
-    ``start(idx, active)`` hands the *predicted* next selection to a
-    daemon thread that gathers the rows into one of two reusable host
-    staging buffers (double-buffering: the buffer an in-flight upload
-    reads is never the one the next prefetch writes) and ships them to
-    the device with ``jax.device_put``. ``take(idx, active)`` consumes a
-    matching staged upload (hit), returns ``None`` on no/other pending
-    work (the caller gathers synchronously), and ``cancel()`` discards a
-    misprediction. Counters record hits / misses / cancels plus staging
-    vs blocked time, so the benchmark can report the hit rate and the
+    ``start(idx, active)`` hands a *predicted* selection to a daemon
+    thread that gathers the rows into one of ``depth + 1`` reusable host
+    staging buffers (the ring generalizes double-buffering: a buffer an
+    in-flight upload reads is never one a queued prefetch writes) and
+    ships them to the device with ``jax.device_put``. Up to ``depth``
+    predictions may be in flight at once, consumed strictly in FIFO
+    order; starting a ``depth+1``-th evicts the oldest (counted
+    cancelled). ``take(idx, active)`` walks the queue from the front:
+    non-matching entries ahead of a match are stale predictions and are
+    discarded as misses; a matching entry is consumed (hit); an empty
+    queue returns ``None`` (the caller gathers synchronously).
+    ``cancel()`` discards every queued prediction. ``depth=1`` is
+    exactly the historical double-buffered single-slot behavior,
+    bit-for-bit. Counters record hits / misses / cancels plus staging vs
+    blocked time, so the benchmark can report the hit rate and the
     wall-clock the overlap actually hid.
     """
 
-    def __init__(self, corpus: HostCorpus):
+    def __init__(self, corpus: HostCorpus, depth: int = 1):
+        if depth < 1:
+            raise ValueError("prefetch depth must be >= 1")
         self._corpus = corpus
+        self.depth = int(depth)
         self._lock = threading.Lock()
-        self._pending = None      # (key, event, holder)
-        self._buffers: list[dict | None] = [None, None]
-        self._flip = 0
+        self._pending: list[tuple] = []   # FIFO of (key, event, holder)
+        self._buffers: list[dict | None] = [None] * (self.depth + 1)
+        self._ring = 0
         self.hits = 0
         self.misses = 0
         self.cancelled = 0
@@ -433,22 +448,18 @@ class CohortPrefetcher:
     @property
     def inflight_nbytes(self) -> int:
         with self._lock:
-            if self._pending is None:
-                return 0
-            holder = self._pending[2]
-            staged = holder.get("staged")
-        if staged is None:
-            return 0
-        return sum(int(v.size) * v.dtype.itemsize for v in staged.values())
+            staged = [p[2].get("staged") for p in self._pending]
+        return sum(sum(int(v.size) * v.dtype.itemsize for v in s.values())
+                   for s in staged if s is not None)
 
     # ------------------------------------------------------------ staging
     def _staging_buffer(self, idx: np.ndarray) -> dict:
-        """The next staging buffer, (re)allocated to the cohort shape.
+        """The next ring buffer, (re)allocated to the cohort shape.
         Preallocated and reused — the host-pinned-buffer analog on
         backends without explicit pinning."""
         m = len(idx)
-        self._flip ^= 1
-        buf = self._buffers[self._flip]
+        self._ring = (self._ring + 1) % len(self._buffers)
+        buf = self._buffers[self._ring]
         shapes = {k: (m,) + v.shape[1:]
                   for k, v in self._corpus._arrays.items()}
         if buf is None or any(buf[k].shape != shapes[k] or
@@ -456,7 +467,7 @@ class CohortPrefetcher:
                               for k, v in self._corpus._arrays.items()):
             buf = {k: np.empty(shapes[k], v.dtype)
                    for k, v in self._corpus._arrays.items()}
-            self._buffers[self._flip] = buf
+            self._buffers[self._ring] = buf
         return buf
 
     def _stage(self, idx: np.ndarray, buf: dict, holder: dict,
@@ -474,26 +485,31 @@ class CohortPrefetcher:
 
     def start(self, idx: np.ndarray, active: np.ndarray | None) -> None:
         with self._lock:
-            if self._pending is not None:      # overwrite: old prediction
-                self.cancelled += 1            # is dead either way
+            while len(self._pending) >= self.depth:
+                # queue full: the OLDEST prediction is dead either way
+                # (depth=1 keeps the historical overwrite semantics)
+                self._pending.pop(0)
+                self.cancelled += 1
             done = threading.Event()
             holder: dict = {}
-            self._pending = (_key(idx, active), done, holder)
+            self._pending.append((_key(idx, active), done, holder))
         buf = self._staging_buffer(idx)
         threading.Thread(target=self._stage, args=(idx, buf, holder, done),
                          daemon=True).start()
 
     # ----------------------------------------------------------- consuming
     def take(self, idx: np.ndarray, active: np.ndarray | None):
+        want = _key(idx, active)
         with self._lock:
-            pending = self._pending
+            pending = None
+            while self._pending:
+                head = self._pending.pop(0)
+                if head[0] == want:
+                    pending = head
+                    break
+                self.misses += 1     # stale prediction ahead of the match
             if pending is None:
                 return None
-            if pending[0] != _key(idx, active):
-                self._pending = None
-                self.misses += 1
-                return None
-            self._pending = None
         _, done, holder = pending
         t0 = time.perf_counter()
         done.wait()
@@ -506,9 +522,8 @@ class CohortPrefetcher:
 
     def cancel(self) -> None:
         with self._lock:
-            if self._pending is not None:
-                self._pending = None
-                self.cancelled += 1
+            self.cancelled += len(self._pending)
+            self._pending.clear()
 
     def stats(self) -> dict:
         total = self.hits + self.misses + self.cancelled

@@ -21,7 +21,14 @@ axis           question it answers                   built-ins
                                                      ``devconcat``
 =============  ====================================  ======================
 
-A fifth registry kind, ``engine``, picks the round *driver* for a
+An optional fifth axis, ``cluster`` (:mod:`repro.fl.clusters`), swaps the
+single global model for a K-center ``ModelBank``
+(``ServerConfig.num_clusters``): clients train from their assigned
+center (``ifca`` loss-based / ``fesem`` weight-distance assignment) and
+judgment + aggregation run per cluster — compositions ``ifca``,
+``ifca+maxent``, ``fesem``.
+
+A further registry kind, ``engine``, picks the round *driver* for a
 composition: ``"sequential"`` (the default ``Server``), ``"pipelined"``
 (:mod:`repro.fl.runtime` — mesh-sharded client fan-out + judgment
 speculation), or ``"async"`` (streaming buffered rounds: a deterministic
@@ -64,11 +71,18 @@ old (``FedEntropyTrainer`` + ``FLConfig``)             new (``repro.fl``)
 """
 from ..core.strategies import LocalSpec
 from ..data.corpus import ClientCorpus, DataQueue, Normalize
+from ..data.partition import DriftEvent, drift_schedule
 from .aggregators import (
-    DeviceConcatAggregator, ScaffoldAggregator, WeightedAverageAggregator,
+    DeviceConcatAggregator, PerClusterAggregator, ScaffoldAggregator,
+    WeightedAverageAggregator,
+)
+from .clusters import (
+    FeSEMAssigner, IFCAAssigner, ModelBank, argmin_assign,
 )
 from .judges import BudgetedJudge, MaxEntropyJudge, PassThroughJudge
-from .protocols import Aggregator, ClientStrategy, Judge, Selector
+from .protocols import (
+    Aggregator, ClientStrategy, ClusterAssigner, Judge, Selector,
+)
 from .registry import Composition, build, get, names, register
 from .selectors import (
     CatGrouper, PoolCatGrouper, PoolSelector, QueueSelector,
@@ -90,13 +104,15 @@ from .runtime import (
 __all__ = [
     "Aggregator", "AsyncBufferedServer", "AsyncConfig", "BoundedJitCache",
     "BudgetedJudge", "CatChainStrategy", "CatGrouper", "ClientCorpus",
-    "ClientStrategy", "Composition", "DataQueue", "DeviceConcatAggregator",
-    "FedAvgStrategy", "FedProxStrategy", "Judge", "LMWindowStrategy",
-    "LocalSpec", "MaxEntropyJudge", "MoonStrategy", "Normalize",
-    "PassThroughJudge", "PipelinedServer", "PoolCatGrouper", "PoolSelector",
-    "QueueSelector", "RuntimeConfig", "ScaffoldAggregator",
-    "ScaffoldStrategy", "ScanConfig", "ScanServer", "Selector", "Server",
-    "ServerConfig", "TracedPoolSelector", "UniformSelector",
-    "WeightedAverageAggregator", "build", "get", "names", "register",
+    "ClientStrategy", "ClusterAssigner", "Composition", "DataQueue",
+    "DeviceConcatAggregator", "DriftEvent", "FeSEMAssigner",
+    "FedAvgStrategy", "FedProxStrategy", "IFCAAssigner", "Judge",
+    "LMWindowStrategy", "LocalSpec", "MaxEntropyJudge", "ModelBank",
+    "MoonStrategy", "Normalize", "PassThroughJudge", "PerClusterAggregator",
+    "PipelinedServer", "PoolCatGrouper", "PoolSelector", "QueueSelector",
+    "RuntimeConfig", "ScaffoldAggregator", "ScaffoldStrategy", "ScanConfig",
+    "ScanServer", "Selector", "Server", "ServerConfig",
+    "TracedPoolSelector", "UniformSelector", "WeightedAverageAggregator",
+    "argmin_assign", "build", "drift_schedule", "get", "names", "register",
     "runtime", "total_uplink_bytes",
 ]

@@ -15,6 +15,10 @@
 ``DeviceConcatAggregator``    — FedCAT (arXiv 2202.12751): identity within
                                 a chain, size-weighted average across the
                                 chains' representative models.
+``PerClusterAggregator``      — clustered FL: masks any base aggregator
+                                over the K-center cluster axis (one
+                                admitted-member average per center; empty
+                                clusters keep their center unchanged).
 """
 from __future__ import annotations
 
@@ -124,3 +128,50 @@ class DeviceConcatAggregator:
         return jax.tree.map(
             lambda ag, wg: jnp.where(kept, ag, wg.astype(ag.dtype)),
             avg, global_params)
+
+
+@register("aggregator", "perclstr")
+class PerClusterAggregator:
+    """Clustered merge: the base aggregator's weighted mean, masked over
+    the cluster axis.
+
+    On a clustered round ``global_params`` is the :class:`ModelBank`'s
+    stacked (K, ...) pytree and ``out["cluster"]`` carries the round's
+    per-client cluster ids; each center averages ONLY its own admitted
+    members (``mask * (cluster == k)``) through the base aggregator, and
+    a cluster with no admitted member this round keeps its center
+    unchanged (the ``DeviceConcatAggregator`` empty-chain guard —
+    ``masked_mean_tree``'s eps-clipped denominator would otherwise zero
+    the center out).
+
+    Unclustered cohorts (no ``"cluster"`` key — every K=1 round) pass
+    straight through to the base aggregator, so ``ifca+maxent`` at K=1
+    is bit-for-bit the ``weighted`` seed path.
+    """
+
+    def __init__(self, base=None):
+        self.base = base if base is not None \
+            else WeightedAverageAggregator()
+
+    @classmethod
+    def from_config(cls, config, local):
+        return cls()
+
+    def __call__(self, global_params, out, sizes, mask):
+        if "cluster" not in out:
+            return self.base(global_params, out, sizes, mask)
+        cids = jnp.asarray(out["cluster"], jnp.int32)
+        sizes = jnp.asarray(sizes, jnp.float32)
+        mask = jnp.asarray(mask, jnp.float32)
+        k = jax.tree.leaves(global_params)[0].shape[0]
+        centers = []
+        for c in range(k):
+            member = (cids == c).astype(jnp.float32)
+            mk = mask * member
+            old = jax.tree.map(lambda s: s[c], global_params)
+            avg = self.base(old, out, sizes, mk)
+            kept = jnp.sum(sizes * mk) > 0
+            centers.append(jax.tree.map(
+                lambda a, o: jnp.where(kept, a.astype(o.dtype), o),
+                avg, old))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *centers)

@@ -89,6 +89,44 @@ class Judge(Protocol):
 
 
 @runtime_checkable
+class ClusterAssigner(Protocol):
+    """Optional fifth axis: maps selected clients to model-bank centers.
+
+    When a composition names a ``cluster`` assigner (and
+    ``ServerConfig.num_clusters > 1``) the server carries a K-center
+    :class:`repro.fl.clusters.ModelBank` instead of one pytree, clients
+    train from their assigned center, and judgment + aggregation run per
+    cluster. Control-plane contract: ``assign`` returns host-side numpy
+    ids and must be *verdict-independent given the bank* (the pipelined
+    engine assigns round t+1 against the speculatively aggregated bank
+    and adopts it only on an oracle hit).
+    """
+
+    num_clusters: int
+
+    def bind(self, server) -> None:
+        """Attach the server whose corpus/bank/apply_fn drive assignment
+        (mirrors ``Selector.bind_data``); called once at construction."""
+        ...
+
+    def assign(self, sel: Sequence[int], bank=None) -> np.ndarray:
+        """Cluster id per selected client, drawn against ``bank`` (the
+        server's current bank when ``None``)."""
+        ...
+
+    def update(self, sel: Sequence[int], cluster_ids: np.ndarray,
+               out: dict, bank) -> None:
+        """Fold the round's client outputs back into assignment state
+        (FeSEM's sticky re-filing; a no-op for stateless assigners).
+        Runs against the round's *pre-aggregation* bank."""
+        ...
+
+    def stats(self) -> dict:
+        """Introspection counters (cluster occupancy etc.) for logging."""
+        ...
+
+
+@runtime_checkable
 class Aggregator(Protocol):
     """Merges admitted client models into the next global model."""
 

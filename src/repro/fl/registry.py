@@ -25,19 +25,24 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any
 
-KINDS = ("selector", "strategy", "judge", "aggregator", "composition",
-         "engine")
+KINDS = ("selector", "strategy", "judge", "aggregator", "cluster",
+         "composition", "engine")
 
 _REGISTRY: dict[str, dict[str, Any]] = {k: {} for k in KINDS}
 
 
 @dataclass(frozen=True)
 class Composition:
-    """One component name per axis of the round."""
+    """One component name per axis of the round. ``cluster`` (optional,
+    a fifth axis) names a :mod:`repro.fl.clusters` assigner — the
+    composition then runs a K-center ``ModelBank``
+    (``ServerConfig.num_clusters``) with judgment and aggregation per
+    cluster; ``None`` keeps the single-global-model round."""
     strategy: str = "fedavg"
     selector: str = "uniform"
     judge: str = "none"
     aggregator: str = "weighted"
+    cluster: str | None = None
 
 
 def register(kind: str, name: str, obj: Any = None):
@@ -77,7 +82,8 @@ def _instantiate(kind: str, spec: Any, config, local):
 
 def build(name: str, apply_fn, init_params, client_data, config,
           local=None, *, selector=None, strategy=None, judge=None,
-          aggregator=None, engine=None, runtime=None, data_plane="auto"):
+          aggregator=None, cluster=None, engine=None, runtime=None,
+          data_plane="auto", drift=None):
     """Construct a server (an *engine*) from a composition name.
 
     ``selector``/``strategy``/``judge``/``aggregator`` override individual
@@ -156,6 +162,14 @@ def build(name: str, apply_fn, init_params, client_data, config,
         kwargs["runtime"] = runtime
     if data_plane != "auto":
         kwargs["data_plane"] = data_plane
+    # the optional cluster axis: a named/instance ClusterAssigner makes
+    # the engine carry a K-center ModelBank (K = config.num_clusters;
+    # K=1 reduces to the single-model path exactly)
+    cl = cluster if cluster is not None else comp.cluster
+    if cl is not None:
+        kwargs["cluster"] = _instantiate("cluster", cl, config, local)
+    if drift is not None:
+        kwargs["drift"] = drift
     return engine_cls(
         apply_fn, init_params, client_data, config,
         selector=_instantiate("selector", selector or comp.selector,
@@ -197,3 +211,17 @@ register("composition", "fedcat+maxent",
 # growing prefix of the local dataset; judgment stays the paper's maxent.
 register("composition", "fedentropy+queue",
          Composition(strategy="fedavg", selector="queue", judge="maxent"))
+# Clustered FL (the K-center ModelBank axis; K = ServerConfig.num_clusters):
+# "ifca" is the loss-based assignment baseline (every update admitted),
+# "fesem" the weight-distance alternation, and "ifca+maxent" runs the
+# paper's max-entropy judgment WITHIN each cluster — at K=1 it is exactly
+# the seed "fedentropy" recipe (perclstr degrades to weighted).
+register("composition", "ifca",
+         Composition(strategy="fedavg", selector="uniform", judge="none",
+                     aggregator="perclstr", cluster="ifca"))
+register("composition", "ifca+maxent",
+         Composition(strategy="fedavg", selector="pools", judge="maxent",
+                     aggregator="perclstr", cluster="ifca"))
+register("composition", "fesem",
+         Composition(strategy="fedavg", selector="uniform", judge="none",
+                     aggregator="perclstr", cluster="fesem"))

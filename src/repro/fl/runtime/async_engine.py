@@ -155,6 +155,20 @@ class AsyncBufferedServer(PipelinedServer):
                 "screens single arrivals and cannot honor group dispatch "
                 "yet — use the sequential or pipelined engine (async + "
                 "fedcat groups is a recorded ROADMAP follow-up)")
+        if getattr(self, "bank", None) is not None:
+            raise ValueError(
+                f"{type(self.cluster).__name__} carries a K-center "
+                "ModelBank; the async engine's per-arrival admission has "
+                "no per-cluster buffer semantics yet — use the sequential "
+                "or pipelined engine (async + clusters is a recorded "
+                "ROADMAP follow-up)")
+        if self._drift:
+            raise ValueError(
+                "the async engine's in-flight arrival heap holds updates "
+                "computed against the dispatch-time corpus; a drift "
+                "schedule would mix pre- and post-drift arrivals in one "
+                "flush — use the sequential or pipelined engine for "
+                "drifted runs")
         self.async_config = cfg
         self.clock = ArrivalClock(cfg, self.config.num_clients)
         self._events: list[tuple] = []   # heap of (t_arrival, seq, entry)
@@ -280,6 +294,17 @@ class AsyncBufferedServer(PipelinedServer):
 
         pos, neg = self._pos_log, self._neg_log
         self.selector.update(pos, neg)
+        # staleness feedback plumbing: selectors exposing
+        # ``observe_staleness`` see each screened arrival's τ (flushes
+        # elapsed since its dispatch version) alongside the verdict, in
+        # arrival order — the hook a staleness-aware selector would rank
+        # on. Pure observation: no built-in selector defines it, so the
+        # default stream (and the sequential reduction) is untouched.
+        observe = getattr(self.selector, "observe_staleness", None)
+        if observe is not None:
+            observe([{"client": e["client"], "staleness": int(t),
+                      "admitted": bool(e["admitted"])}
+                     for e, t in zip(log, tau)])
 
         comm = comm_bytes(self.global_params, len(sel), len(pos),
                           log[0]["soft"].shape[-1],

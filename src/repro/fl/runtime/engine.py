@@ -145,7 +145,7 @@ class PipelinedServer(Server):
         return self._compile_cache().get(
             key, lambda: make_sharded_client_fn(
                 self.apply_fn, self.strategy.spec,
-                self.strategy.client_in_axes(), mesh,
+                self._client_in_axes(), mesh,
                 donate_data=self.runtime.donate_data,
                 # chain strategies shard whole groups, not devices: the
                 # inner fn's leading axis is the group axis and takes the
@@ -195,6 +195,13 @@ class PipelinedServer(Server):
         return self._speculative_round(spec_fn)
 
     def _speculative_round(self, spec_fn) -> dict:
+        # drift applies BEFORE selection, exactly as sequentially. The
+        # spec_next gate below guarantees no pending dispatch ever spans a
+        # drift boundary, so the corpus swap never invalidates in-flight
+        # compute (and never desyncs the adopted selector stream).
+        drifted = self._apply_drift()
+        if self.bank is not None:
+            return self._clustered_spec_round(spec_fn, drifted)
         cfg = self.config
         num = cfg.cohort_size()
 
@@ -208,6 +215,11 @@ class PipelinedServer(Server):
             redispatched = self._redispatch_next
         self._redispatch_next = False
         idx = np.asarray(sel)
+        # round t+1 re-partitions some clients' data: dispatching it now
+        # would train on the PRE-drift corpus. Keep round t's verdict
+        # speculation (the aggregation overlap is still real) but skip the
+        # next-round dispatch — t+1 selects synchronously after the swap.
+        spec_next = not self._drift_at(self.round_idx + 1)
 
         # --- device-side speculative verdict + aggregation (all async) ---
         sizes32 = out["size"].astype(jnp.float32)
@@ -232,30 +244,33 @@ class PipelinedServer(Server):
         # state folding is mask-independent (Alg. 2): adopt it before the
         # speculative dispatch, which slices its client inputs from it
         self.state = new_state
-        sel_copy = copy.deepcopy(self.selector)
-        sel_copy.update(spec_pos, spec_neg)
-        next_sel = sel_copy.select(num)
-        # group assignment rides with the dispatch: sel_copy made (and, for
-        # chain strategies, grouped) this selection, so it is the selector
-        # the cohort layout is read from
         prefetch = getattr(self.corpus, "prefetch", None)
-        if prefetch is None:
-            next_out = self._dispatch(next_sel, sel_copy, new_global_spec)
-        else:
-            # streaming plane: a dispatch here would block THIS thread on
-            # the host gather + H2D upload of round t+1's cohort. Stage it
-            # on the prefetch thread instead, so the upload overlaps the
-            # oracle's block on round t's soft labels below; the dispatch
-            # itself waits for the verdict (on a hit the gathered cohort
-            # is already staged — on a miss nothing was computed against
-            # the wrong selection and only the staged buffers are thrown
-            # away). The schedule read is idempotent (`data_schedule`
-            # returns the counts fixed at select time), so the dispatch's
-            # own read below sees bit-identical counts.
-            sched = getattr(sel_copy, "data_schedule", None)
-            prefetch(np.asarray(next_sel),
-                     None if sched is None else sched(next_sel))
-            next_out = None
+        next_out = None
+        if spec_next:
+            sel_copy = copy.deepcopy(self.selector)
+            sel_copy.update(spec_pos, spec_neg)
+            next_sel = sel_copy.select(num)
+            # group assignment rides with the dispatch: sel_copy made (and,
+            # for chain strategies, grouped) this selection, so it is the
+            # selector the cohort layout is read from
+            if prefetch is None:
+                next_out = self._dispatch(next_sel, sel_copy,
+                                          new_global_spec)
+            else:
+                # streaming plane: a dispatch here would block THIS thread
+                # on the host gather + H2D upload of round t+1's cohort.
+                # Stage it on the prefetch thread instead, so the upload
+                # overlaps the oracle's block on round t's soft labels
+                # below; the dispatch itself waits for the verdict (on a
+                # hit the gathered cohort is already staged — on a miss
+                # nothing was computed against the wrong selection and only
+                # the staged buffers are thrown away). The schedule read is
+                # idempotent (`data_schedule` returns the counts fixed at
+                # select time), so the dispatch's own read below sees
+                # bit-identical counts.
+                sched = getattr(sel_copy, "data_schedule", None)
+                prefetch(np.asarray(next_sel),
+                         None if sched is None else sched(next_sel))
 
         # --- float64 oracle on host, overlapping the in-flight compute ---
         soft = np.asarray(out["soft_label"], np.float64)
@@ -267,16 +282,23 @@ class PipelinedServer(Server):
         hit = bool(np.array_equal(mask, spec_mask))
         if hit:
             self.global_params = new_global_spec
-            self.selector = sel_copy          # same verdict -> same stream
-            if next_out is None:
-                # streaming plane: the cohort upload was prefetched above;
-                # this dispatch consumes the staged buffers (a hit in the
-                # prefetcher) instead of gathering synchronously
-                next_out = self._dispatch(next_sel, sel_copy,
-                                          new_global_spec)
-            self._pending = (next_sel, next_out)
+            if spec_next:
+                self.selector = sel_copy      # same verdict -> same stream
+                if next_out is None:
+                    # streaming plane: the cohort upload was prefetched
+                    # above; this dispatch consumes the staged buffers (a
+                    # hit in the prefetcher) instead of gathering
+                    # synchronously
+                    next_out = self._dispatch(next_sel, sel_copy,
+                                              new_global_spec)
+                self._pending = (next_sel, next_out)
+            else:
+                # drift boundary: no speculative t+1 exists; feed the
+                # verdict back directly (identical to the sequential call)
+                self.selector.update([sel[i] for i in a_rel],
+                                     [sel[i] for i in r_rel])
         else:                                  # discard, redo from oracle
-            if prefetch is not None:
+            if spec_next and prefetch is not None:
                 # selector misprediction: drop the staged cohort — the
                 # re-selected round t+1 falls back to a synchronous gather
                 self.corpus.cancel_prefetch()
@@ -285,7 +307,9 @@ class PipelinedServer(Server):
                 jnp.asarray(sizes, jnp.float32), jnp.asarray(mask))
             self.selector.update([sel[i] for i in a_rel],
                                  [sel[i] for i in r_rel])
-            self._redispatch_next = True
+            # a miss only forces a re-dispatch when a speculative t+1 was
+            # actually issued (at a drift boundary nothing was in flight)
+            self._redispatch_next = spec_next
 
         pos = [sel[i] for i in a_rel]
         neg = [sel[i] for i in r_rel]
@@ -295,6 +319,123 @@ class PipelinedServer(Server):
         rec = {"round": self.round_idx, "selected": sel, "positive": pos,
                "negative": neg, "entropy": ent, "comm": comm,
                "spec_hit": hit, "redispatched": redispatched}
+        self.history.append(rec)
+        self.round_idx += 1
+        return rec
+
+    # ------------------------------------------------- clustered speculation
+    def _clustered_spec_round(self, spec_fn, drifted) -> dict:
+        """The speculative round over a K-center ModelBank.
+
+        Structure mirrors ``_speculative_round`` with three deltas: the
+        traced judge runs per cluster (masks combined over the cohort),
+        the speculative aggregation is the ``perclstr`` masked mean over
+        the bank, and the speculative NEXT assignment is computed against
+        the speculatively aggregated bank — on an oracle hit that bank is
+        bitwise the one the sequential path would have produced, so the
+        assignment (host argmin over jitted scores) is bitwise too; on a
+        miss the dispatch is discarded exactly like the unclustered path.
+        Assignment-state folding (FeSEM) is verdict-independent by
+        protocol contract and runs exactly once per round, before any
+        speculative next-round assignment reads it.
+        """
+        cfg = self.config
+        num = cfg.cohort_size()
+
+        if self._pending is not None:
+            sel, cids, out = self._pending
+            self._pending = None
+            redispatched = False
+        else:
+            sel = self.selector.select(num)
+            cids = self.cluster.assign(sel)
+            out = self._dispatch_banked(sel, self.selector, cids)
+            redispatched = self._redispatch_next
+        self._redispatch_next = False
+        idx = np.asarray(sel)
+        spec_next = not self._drift_at(self.round_idx + 1)
+
+        # --- per-cluster device verdict (cluster-ascending, the oracle's
+        # own order) combined into one cohort mask ---------------------
+        sizes32 = out["size"].astype(jnp.float32)
+        soft_dev = out["soft_label"].astype(jnp.float32)
+        cids_np = np.asarray(cids)
+        spec_mask = np.zeros(len(sel), np.float32)
+        spec_pos, spec_neg = [], []
+        for k in sorted(int(c) for c in np.unique(cids_np)):
+            rows = np.where(cids_np == k)[0]
+            jr = spec_fn(jnp.take(soft_dev, rows, axis=0),
+                         jnp.take(sizes32, rows, axis=0))
+            mk = np.asarray(jr.mask)
+            spec_mask[rows[mk > 0]] = 1.0
+            spec_pos.extend(sel[int(rows[i])] for i in range(len(rows))
+                            if mk[i] > 0)
+            if jr.removal_order is not None:
+                order = np.asarray(jr.removal_order)
+                spec_neg.extend(sel[int(rows[int(r)])] for r in order
+                                if r >= 0)
+            else:
+                spec_neg.extend(sel[int(rows[i])] for i in range(len(rows))
+                                if mk[i] == 0)
+
+        out_c = dict(out)
+        out_c["cluster"] = jnp.asarray(cids_np, jnp.int32)
+        new_stacked_spec = self.aggregator(
+            self.bank.stacked, out_c, sizes32, jnp.asarray(spec_mask))
+        bank_spec = self.bank.replace(new_stacked_spec)
+        new_state = self.strategy.update_state(
+            self.state, self.bank.stacked, out, idx, cfg.num_clients)
+        # once per round, against the PRE-aggregation centers, BEFORE the
+        # speculative next assignment reads the sticky state it may mutate
+        self.cluster.update(sel, cids_np, out, self.bank)
+
+        # --- speculatively select + assign + dispatch round t+1 ---------
+        self.state = new_state
+        next_out = None
+        if spec_next:
+            sel_copy = copy.deepcopy(self.selector)
+            sel_copy.update(spec_pos, spec_neg)
+            next_sel = sel_copy.select(num)
+            next_cids = self.cluster.assign(next_sel, bank=bank_spec)
+            # clustered dispatch is always eager (no prefetch deferral):
+            # the assignment itself must evaluate the cohort's data, so
+            # the gather cannot be deferred behind the oracle anyway; on
+            # the streaming plane this trades upload overlap for the
+            # simpler invariant that a pending always holds real outputs
+            next_out = self._dispatch_banked(next_sel, sel_copy, next_cids,
+                                             bank=bank_spec)
+
+        # --- float64 per-cluster oracle on host -------------------------
+        soft = np.asarray(out["soft_label"], np.float64)
+        sizes = np.asarray(out["size"], np.float64)
+        mask, pos, neg, ent, clusters = self._judge_clusters(
+            soft, sizes, cids_np, sel)
+
+        hit = bool(np.array_equal(mask, spec_mask))
+        if hit:
+            self.bank = bank_spec
+            if spec_next:
+                self.selector = sel_copy      # same verdict -> same stream
+                self._pending = (next_sel, next_cids, next_out)
+            else:
+                self.selector.update(pos, neg)
+        else:                                  # discard, redo from oracle
+            self.bank = self.bank.replace(self.aggregator(
+                self.bank.stacked, out_c,
+                jnp.asarray(sizes, jnp.float32), jnp.asarray(mask)))
+            self.selector.update(pos, neg)
+            self._redispatch_next = spec_next
+        self.global_params = self.bank.stacked
+
+        comm = comm_bytes(self.bank.center(0), len(sel), len(pos),
+                          soft.shape[-1],
+                          control_variate=self.strategy.doubles_uplink)
+        rec = {"round": self.round_idx, "selected": sel, "positive": pos,
+               "negative": neg, "entropy": ent, "comm": comm,
+               "cluster": [int(c) for c in cids_np], "clusters": clusters,
+               "spec_hit": hit, "redispatched": redispatched}
+        if drifted:
+            rec["drift"] = [list(ev.clients) for ev in drifted]
         self.history.append(rec)
         self.round_idx += 1
         return rec

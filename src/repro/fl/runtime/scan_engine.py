@@ -208,6 +208,24 @@ class ScanServer(PipelinedServer):
                 "code": "untraced-judge",
                 "component": type(self.judge).__name__,
                 "detail": "the judge has no traced form"})
+        if getattr(self, "bank", None) is not None:
+            reasons.append({
+                "code": "cluster-dispatch",
+                "component": type(self.cluster).__name__,
+                "detail": "clustered rounds assign clients to ModelBank "
+                          "centers host-side every round (argmin over "
+                          "jitted scores) and judge per cluster; the "
+                          "scan cannot carry the K-center bank through "
+                          "a host-free fold"})
+        if self._drift:
+            reasons.append({
+                "code": "drift-schedule",
+                "component": "DriftEvent",
+                "detail": "a drift schedule rebuilds the corpus "
+                          "mid-training; the scan's compiled step "
+                          "captures the corpus at trace time, so folded "
+                          "rounds would silently train on pre-drift "
+                          "data"})
         self.fallback_reasons = reasons
         if R == 1:
             return 1

@@ -39,7 +39,7 @@ import numpy as np
 
 from ..core.aggregation import comm_bytes
 from ..core.strategies import ApplyFn, client_update, cross_entropy
-from ..data.stream import as_data_plane
+from ..data.stream import as_data_plane, plane_of
 from .protocols import Aggregator, ClientStrategy, Judge, Selector
 
 
@@ -52,6 +52,7 @@ class ServerConfig:
     seed: int = 0
     jit_cache_size: int = 4         # per-server compiled-program LRU bound
     group_size: int = 2             # FedCAT chain length (catgroups/catchain)
+    num_clusters: int = 1           # K model-bank centers (1 = unclustered)
 
     def cohort_size(self) -> int:
         """|S_t| = max(1, round(N * C)) — the one place the paper's
@@ -150,6 +151,8 @@ class Server:
         judge: Judge,
         aggregator: Aggregator,
         data_plane: str = "auto",
+        cluster=None,
+        drift=None,
     ):
         self.apply_fn = apply_fn
         self.global_params = init_params
@@ -174,6 +177,49 @@ class Server:
         bind = getattr(selector, "bind_data", None)
         if bind is not None:
             bind(self.corpus)
+        # ---- the optional cluster axis (K-center ModelBank) ----------
+        # K=1 (or no assigner) keeps bank=None: every code path below is
+        # byte-identical to the single-model server, which is what makes
+        # clustered compositions reduce to the seed goldens exactly.
+        self.cluster = cluster
+        k = (getattr(cluster, "num_clusters", 1)
+             if cluster is not None else 1)
+        if k > 1:
+            if getattr(strategy, "make_client_fn", None) is not None or \
+                    getattr(strategy, "prepare_round", None) is not None:
+                raise ValueError(
+                    f"{type(strategy).__name__} builds its own client "
+                    "fan-out (chains/groups); the clustered ModelBank "
+                    "needs the plain vmapped ClientUpdate to thread "
+                    "per-client start params")
+            if self.state is not None:
+                raise ValueError(
+                    f"{type(strategy).__name__} carries cross-round "
+                    "client state; clustered rounds support stateless "
+                    "strategies only (per-cluster control variates are a "
+                    "recorded ROADMAP follow-up)")
+            from .clusters import ModelBank
+            self.bank = ModelBank.init(init_params, k, seed=config.seed)
+            self.global_params = self.bank.stacked
+        else:
+            self.bank = None
+        if cluster is not None:
+            bindc = getattr(cluster, "bind", None)
+            if bindc is not None:
+                bindc(self)
+        # ---- the optional drift schedule -----------------------------
+        # events apply at the START of their round (before selection),
+        # replacing the drifting clients' stacked rows and rebinding the
+        # data plane + selector stats; see repro.data.partition.
+        self._drift = sorted(list(drift or ()), key=lambda e: e.round)
+        s = self.corpus.samples_per_client
+        for ev in self._drift:
+            got = {kk: np.shape(v)[1] for kk, v in ev.data.items()}
+            if any(v != s for v in got.values()):
+                raise ValueError(
+                    f"drift event at round {ev.round} carries rows of "
+                    f"sample length {got}, corpus has {s} "
+                    "(regenerate with samples_per_client=corpus's)")
 
     # ------------------------------------------------------------------
     def _compile_cache(self):
@@ -194,7 +240,16 @@ class Server:
         tag = ("client" if getattr(self.strategy, "make_client_fn", None)
                is None else f"client-{type(self.strategy).__name__}")
         return (tag, self.apply_fn, self.strategy.spec,
-                self.strategy.client_in_axes(), self.corpus.signature())
+                self._client_in_axes(), self.corpus.signature())
+
+    def _client_in_axes(self) -> tuple:
+        """The strategy's vmap in_axes — with the params slot mapped
+        (axis 0) on clustered servers: each cohort row then trains from
+        its own bank center (``ModelBank.gather``'s (m, ...) stack)
+        instead of one broadcast global model. Part of the compile-cache
+        key, so banked and broadcast programs never alias."""
+        ax = tuple(self.strategy.client_in_axes())
+        return ((0,) + ax[1:]) if self.bank is not None else ax
 
     def _client_fn(self):
         make = getattr(self.strategy, "make_client_fn", None)
@@ -204,7 +259,7 @@ class Server:
         return self._compile_cache().get(
             self._client_key(), lambda: jax.jit(_make_client_fn(
                 self.apply_fn, self.strategy.spec,
-                self.strategy.client_in_axes())))
+                self._client_in_axes())))
 
     def _eval_fn(self):
         fn = self.apply_fn
@@ -241,8 +296,129 @@ class Server:
                                 aux["valid"])
         return self.strategy.finish_round(out, aux)
 
+    # -------------------------------------------------------------- drift
+    def _apply_drift(self) -> list:
+        """Apply every drift event scheduled for the CURRENT round (before
+        selection): replace the drifting clients' stacked rows, rebuild
+        the corpus on its own plane, and rebind selector stats. Returns
+        the applied events (history annotates drift rounds)."""
+        applied = []
+        while self._drift and self._drift[0].round == self.round_idx:
+            ev = self._drift.pop(0)
+            # as_numpy() may hand back read-only device views / memory
+            # maps: copy only the arrays the event actually rewrites
+            arrays = self.corpus.as_numpy()
+            ids = np.asarray(ev.clients, np.int64)
+            for key, rows in ev.data.items():
+                if key in arrays:
+                    arrays[key] = np.array(arrays[key])
+                    arrays[key][ids] = np.asarray(
+                        rows, arrays[key].dtype)
+            transform = getattr(self.corpus, "transform", None)
+            self.corpus = as_data_plane(arrays, plane_of(self.corpus),
+                                        transform=transform)
+            self.data = self.corpus
+            bind = getattr(self.selector, "bind_data", None)
+            if bind is not None:
+                bind(self.corpus)
+            applied.append(ev)
+        return applied
+
+    def _drift_at(self, round_no: int) -> bool:
+        """True if a drift event is still scheduled for ``round_no`` —
+        the pipelined engine must not speculate across that boundary."""
+        return any(ev.round == round_no for ev in self._drift)
+
+    # ---------------------------------------------------------- clustering
+    def _dispatch_banked(self, sel, selector, cluster_ids, bank=None):
+        """The clustered cohort dispatch: start params are each client's
+        assigned center, gathered off ``bank`` (the server's own unless a
+        speculative bank is passed)."""
+        bank = self.bank if bank is None else bank
+        return self._run_cohort(sel, selector, bank.gather(cluster_ids))
+
+    def _judge_clusters(self, soft, sizes, cluster_ids, sel):
+        """Per-cluster judgment: the composition's judge runs on each
+        cluster's member rows independently (float64, host — the verdict
+        of record for clustered rounds).
+
+        Returns ``(mask, pos, neg, entropy, clusters)`` — the combined
+        0/1 admission mask over the cohort, positive/negative client ids
+        (clusters ascending, the judge's own order within each), the
+        member-count-weighted mean of the per-cluster group entropies,
+        and the per-cluster verdict dict the history records.
+        """
+        cluster_ids = np.asarray(cluster_ids)
+        mask = np.zeros(len(sel), np.float32)
+        pos, neg, clusters = [], [], {}
+        ents = []
+        for k in sorted(int(c) for c in np.unique(cluster_ids)):
+            rows = np.where(cluster_ids == k)[0]
+            a_rel, r_rel, ent = self.judge(soft[rows], sizes[rows])
+            mask[rows[a_rel]] = 1.0
+            p = [sel[int(rows[i])] for i in a_rel]
+            n = [sel[int(rows[i])] for i in r_rel]
+            pos.extend(p)
+            neg.extend(n)
+            clusters[str(k)] = {
+                "members": [sel[int(i)] for i in rows],
+                "positive": p, "negative": n, "entropy": ent}
+            if not np.isnan(ent):
+                ents.append((len(rows), ent))
+        total = sum(n for n, _ in ents)
+        entropy = (sum(n * e for n, e in ents) / total
+                   if total else float("nan"))
+        return mask, pos, neg, entropy, clusters
+
+    def _clustered_round(self) -> dict:
+        """One clustered Alg. 2 round: assign -> per-center ClientUpdate
+        -> per-cluster judgment -> per-cluster aggregation -> feedback."""
+        cfg = self.config
+        sel = self.selector.select(cfg.cohort_size())
+        idx = np.asarray(sel)
+        cids = self.cluster.assign(sel)
+        out = self._dispatch_banked(sel, self.selector, cids)
+
+        soft = np.asarray(out["soft_label"], np.float64)
+        sizes = np.asarray(out["size"], np.float64)
+        mask, pos, neg, ent, clusters = self._judge_clusters(
+            soft, sizes, cids, sel)
+
+        out_c = dict(out)
+        out_c["cluster"] = jnp.asarray(cids, jnp.int32)
+        new_stacked = self.aggregator(
+            self.bank.stacked, out_c,
+            jnp.asarray(sizes, jnp.float32), jnp.asarray(mask))
+        self.state = self.strategy.update_state(
+            self.state, self.bank.stacked, out, idx, cfg.num_clients)
+        # assignment state folds against the PRE-aggregation centers
+        # (verdict-independent — the speculation contract)
+        self.cluster.update(sel, cids, out, self.bank)
+        self.bank = self.bank.replace(new_stacked)
+        self.global_params = self.bank.stacked
+        self.selector.update(pos, neg)
+
+        # uplink accounting per the paper's model: positives ship ONE
+        # model each (their own center), so the template is a single
+        # center, never the K-stacked bank
+        comm = comm_bytes(self.bank.center(0), len(sel), len(pos),
+                          soft.shape[-1],
+                          control_variate=self.strategy.doubles_uplink)
+        rec = {"round": self.round_idx, "selected": sel, "positive": pos,
+               "negative": neg, "entropy": ent, "comm": comm,
+               "cluster": [int(c) for c in cids], "clusters": clusters}
+        self.history.append(rec)
+        self.round_idx += 1
+        return rec
+
     def round(self) -> dict:
         """One paper Alg. 2 round; returns the history record."""
+        drifted = self._apply_drift()
+        if self.bank is not None:
+            rec = self._clustered_round()
+            if drifted:
+                rec["drift"] = [list(ev.clients) for ev in drifted]
+            return rec
         cfg = self.config
         sel = self.selector.select(cfg.cohort_size())
         idx = np.asarray(sel)
@@ -277,12 +453,17 @@ class Server:
 
     # ------------------------------------------------------------------
     def evaluate(self, x: jax.Array, y: jax.Array,
-                 batch: int = 512) -> dict:
+                 batch: int = 512, center: int | None = None) -> dict:
+        """Test-set accuracy/loss. On a clustered server ``center`` picks
+        the bank center to score (default 0 — the un-jittered lineage of
+        the init params); unclustered servers ignore it."""
         n = x.shape[0]
         if n == 0:
             # loud, immediate: batch=min(batch,0)=0 would otherwise die in
             # range(0, 0, 0) before the correct/n ZeroDivisionError could
             raise ValueError("empty eval set (x has 0 rows)")
+        params = self.global_params if self.bank is None \
+            else self.bank.center(0 if center is None else int(center))
         batch = min(batch, n)
         correct, loss_sum = 0.0, 0.0
         f = self._eval_fn()
@@ -295,7 +476,7 @@ class Server:
                 # padded rows are sliced off the logits before scoring
                 reps = jnp.broadcast_to(bx[-1:], (batch - m,) + bx.shape[1:])
                 bx = jnp.concatenate([bx, reps], axis=0)
-            logits = f(self.global_params, bx)[:m]
+            logits = f(params, bx)[:m]
             correct += float(jnp.sum(jnp.argmax(logits, -1) == by))
             loss_sum += float(cross_entropy(logits, by)) * m
         return {"accuracy": correct / n, "loss": loss_sum / n}

@@ -101,7 +101,8 @@ def _components(args, *, host_oracle: bool):
                              participation=args.clients /
                              max(args.logical_clients, 1),
                              eps=args.eps, seed=args.seed,
-                             group_size=args.group_size)
+                             group_size=args.group_size,
+                             num_clusters=args.num_clusters)
     selector = sel_cls.from_config(config=config, local=None)
     if args.judge == "maxent":
         judge = fl.MaxEntropyJudge(
@@ -171,11 +172,31 @@ def stack_lm_clients(corpus, client_idx, samples: int, seq_len: int,
     }
 
 
+def build_drift_events(args, config, corpus, client_idx) -> list:
+    """One label-drift event at ``--drift-at``: half the clients (seeded
+    choice) re-sample their windows from their ring-neighbor's domain
+    rows with a fresh draw stream — the LM analog of a label-distribution
+    re-partition (see ``repro.data.partition.drift_schedule``)."""
+    n = config.num_clients
+    rng = np.random.default_rng(args.seed)
+    k = max(1, n // 2)
+    drifting = sorted(int(c) for c in
+                      rng.choice(n, size=k, replace=False))
+    rotated = [client_idx[(c + 1) % n] for c in drifting]
+    new = stack_lm_clients(corpus, rotated, args.samples_per_client,
+                           args.seq_len, args.seed + 1)
+    return [fl.DriftEvent(
+        round=args.drift_at, clients=tuple(drifting),
+        data={key: np.asarray(v) for key, v in new.items()})]
+
+
 def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
     """Weights-level rounds through ``fl.build`` (sequential or pipelined)."""
     config, selector, judge = _components(args, host_oracle=True)
     data = stack_lm_clients(corpus, client_idx, args.samples_per_client,
                             args.seq_len, args.seed)
+    drift = (build_drift_events(args, config, corpus, client_idx)
+             if args.drift_at >= 0 else None)
     if args.engine == "async":
         if args.speculate:
             raise SystemExit(
@@ -217,6 +238,11 @@ def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
             f"--lm-objective window swaps the client strategy for lmstep; "
             f"--method {args.method} composes its own strategy axis — "
             "drop one of the two")
+    if args.num_clusters > 1 and window:
+        raise SystemExit(
+            "--num-clusters > 1 runs the plain vmapped ClientUpdate "
+            "(per-client bank centers); --lm-objective window swaps in "
+            "the lmstep strategy's own client fn — drop one of the two")
     apply_fn = (lm_window_apply if window else lm_client_apply)(model, cfg)
     server = fl.build(
         composition, apply_fn, model.init(
@@ -225,6 +251,12 @@ def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
                      batch_size=args.per_client_batch),
         selector=selector, strategy="lmstep" if window else None,
         judge=judge,
+        # the cluster axis: --num-clusters>1 opts any composition into the
+        # K-center bank with the --cluster-assign assigner; K=1 leaves a
+        # named clustered composition (e.g. --method ifca) on its own
+        # recipe, which then reduces to the single-model path exactly
+        cluster=args.cluster_assign if args.num_clusters > 1 else None,
+        drift=drift,
         engine=args.engine, runtime=runtime, data_plane=args.data_plane)
     if args.dryrun:
         rep = server.corpus.memory_report()
@@ -249,6 +281,12 @@ def run_server_engine(args, cfg, model, corpus, client_idx) -> None:
             extra = (f" t={rec['flush_time']:.2f}"
                      f" stale_max={max(rec['staleness'])}"
                      f" buf={rec['buffer_occupancy']}")
+        if "cluster" in rec:
+            occ = np.bincount(np.asarray(rec["cluster"]),
+                              minlength=args.num_clusters)
+            extra += f" clusters={'/'.join(str(int(c)) for c in occ)}"
+        if "drift" in rec:
+            extra += f" drift={sum(len(c) for c in rec['drift'])}cl"
         print(f"round {it:4d} pos={len(rec['positive'])}/"
               f"{len(rec['selected'])} ent={rec['entropy']:.4f}"
               f" comm={rec['comm']['total_bytes']}B{extra}", flush=True)
@@ -335,12 +373,29 @@ def main() -> None:
     ap.add_argument("--no-fedentropy", action="store_true")
     ap.add_argument("--method", default="",
                     choices=["", "fedentropy", "fedavg", "fedcat",
-                             "fedcat+maxent", "fedentropy+queue"],
+                             "fedcat+maxent", "fedentropy+queue", "ifca",
+                             "ifca+maxent", "fesem"],
                     help="named repro.fl composition (server engines); "
                          "fedcat chains grouped devices sequentially, "
                          "fedcat+maxent filters chains with judgment, "
                          "fedentropy+queue ranks clients by corpus "
-                         "entropy with a dynamic data queue")
+                         "entropy with a dynamic data queue; ifca/"
+                         "ifca+maxent/fesem run the K-center clustered "
+                         "ModelBank (size via --num-clusters)")
+    ap.add_argument("--num-clusters", type=int, default=1,
+                    help="K ModelBank centers (server engines); 1 keeps "
+                         "the single global model, >1 clusters clients "
+                         "via --cluster-assign with per-cluster judgment "
+                         "and aggregation")
+    ap.add_argument("--cluster-assign", default="ifca",
+                    choices=["ifca", "fesem"],
+                    help="cluster assigner when --num-clusters > 1: ifca "
+                         "= per-round loss argmin over the centers, "
+                         "fesem = sticky weight-distance re-filing")
+    ap.add_argument("--drift-at", type=int, default=-1,
+                    help="re-partition half the clients' local data at "
+                         "this round (label drift; server engines); -1 "
+                         "disables")
     ap.add_argument("--group-size", type=int, default=2,
                     help="FedCAT chain length (fedcat compositions)")
     ap.add_argument("--engine", default="mesh",
@@ -448,6 +503,13 @@ def main() -> None:
                 f"--method {args.method} needs a weights-level engine: "
                 "use --engine sequential or pipelined (the mesh engine "
                 "is composed via --no-fedentropy/--selector/--judge)")
+        if args.num_clusters > 1 or args.drift_at >= 0:
+            # the mesh step threads ONE replicated model through the jitted
+            # program and owns no corpus object to re-partition mid-run
+            raise SystemExit(
+                "--num-clusters/--drift-at need a weights-level engine: "
+                "use --engine sequential or pipelined (the server carries "
+                "the ModelBank and applies the drift schedule)")
         run_mesh_engine(args, cfg, model, corpus, client_idx)
     else:
         run_server_engine(args, cfg, model, corpus, client_idx)

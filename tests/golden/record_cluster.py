@@ -1,0 +1,85 @@
+"""Record tests/golden/cluster_history.json from the sequential ``Server``.
+
+The clustered-rounds reference: the tiny 8-client fixture running the
+``ifca+maxent`` composition with a K=3 ModelBank and one drift event at
+round 2 (half the clients re-partitioned, seeded). Run from the repo
+root after any INTENTIONAL change to clustered round semantics (never to
+paper over a regression):
+
+    PYTHONPATH=src python tests/golden/record_cluster.py
+
+Recorded from the sequential engine on the default single-device CPU;
+tests/test_cluster_engine.py holds the sequential AND pipelined engines
+(speculation off and on) to this one reference bit-for-bit, and the
+forced-8-device CI job re-runs the comparison across the mesh.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+import repro.fl as fl
+from repro.core.strategies import LocalSpec
+from repro.data.partition import drift_schedule, partition, stack_clients
+from repro.data.synthetic import make_image_dataset
+from repro.models import cnn
+
+ROUNDS = 6
+NUM_CLUSTERS = 3
+DRIFT_ROUND = 2
+OUT = os.path.join(os.path.dirname(__file__), "cluster_history.json")
+
+
+def tiny_corpus():
+    """Mirrors tests/test_fl_api.py's ``tiny`` fixture exactly."""
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=4, train_per_class=60, test_per_class=15, hw=16,
+        noise=0.4, seed=0)
+    parts = partition("case1", ytr, 8, 4, seed=0)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=20)
+    params = cnn.init(jax.random.PRNGKey(0), image_hw=16, num_classes=4)
+    return (xtr, ytr), data, params
+
+
+def digest(params) -> float:
+    return float(sum(float(jnp.sum(jnp.abs(x)))
+                     for x in jax.tree.leaves(params)))
+
+
+def main() -> None:
+    (xtr, ytr), data, params = tiny_corpus()
+    drift = drift_schedule(
+        xtr, ytr, 8, 4, at=DRIFT_ROUND, seed=0,
+        samples_per_client=int(data["y"].shape[1]))
+    server = fl.build(
+        "ifca+maxent", cnn.apply, params, data,
+        fl.ServerConfig(num_clients=8, participation=0.5, seed=0,
+                        num_clusters=NUM_CLUSTERS),
+        LocalSpec(epochs=1, batch_size=20), drift=drift)
+    records = []
+    for _ in range(ROUNDS):
+        rec = server.round()
+        records.append({
+            "round": rec["round"], "selected": rec["selected"],
+            "positive": rec["positive"], "negative": rec["negative"],
+            "entropy": repr(rec["entropy"]),
+            "total_bytes": rec["comm"]["total_bytes"],
+            "cluster": rec["cluster"],
+            "clusters": {
+                k: {"members": v["members"], "positive": v["positive"],
+                    "negative": v["negative"], "entropy": repr(v["entropy"])}
+                for k, v in rec["clusters"].items()},
+            "drift": rec.get("drift"),
+        })
+    blob = {"ifca_maxent_k3_drift": {
+        "num_clusters": NUM_CLUSTERS, "drift_round": DRIFT_ROUND,
+        "history": records,
+        "params_digest": repr(digest(server.bank.stacked))}}
+    with open(OUT, "w") as f:
+        json.dump(blob, f, indent=1)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

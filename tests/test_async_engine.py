@@ -174,6 +174,41 @@ def test_flushes_partition_admitted_updates(tiny):
         seen |= batch
 
 
+class _StalenessAwareSelector(fl.PoolSelector):
+    """A selector opting into the per-arrival staleness feed."""
+
+    def __init__(self, num_clients, eps=0.8, seed=0):
+        super().__init__(num_clients, eps, seed)
+        self.seen: list = []
+
+    def observe_staleness(self, arrivals):
+        self.seen.append(arrivals)
+
+
+def test_selector_staleness_feedback(tiny):
+    """Selectors defining ``observe_staleness`` see every screened
+    arrival's τ + verdict per flush; the round stream is untouched."""
+    hook = _StalenessAwareSelector(8)
+    server = _build(tiny, runtime=_STRAGGLER, selector=hook)
+    plain = _build(tiny, runtime=_STRAGGLER)
+    recs = [server.round() for _ in range(4)]
+    for _ in range(4):
+        plain.round()
+    assert len(hook.seen) == len(recs)
+    for batch, rec in zip(hook.seen, recs):
+        assert [e["client"] for e in batch] == rec["selected"]
+        admitted = [e["client"] for e in batch if e["admitted"]]
+        assert sorted(admitted) == sorted(rec["positive"])
+        assert all(isinstance(e["staleness"], int) and e["staleness"] >= 0
+                   for e in batch)
+    # pure observation: same stream as a hook-less run, bit-for-bit
+    for a, b in zip(server.history, plain.history):
+        assert a["selected"] == b["selected"]
+        assert a["positive"] == b["positive"]
+        assert a["entropy"] == b["entropy"]
+    assert getattr(fl.PoolSelector(8), "observe_staleness", None) is None
+
+
 def test_staleness_damping_changes_aggregation(tiny):
     """α > 0 dampens stale updates: same stream, different params."""
     damped = _build(tiny, runtime=_STRAGGLER)

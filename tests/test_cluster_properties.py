@@ -1,0 +1,120 @@
+"""Property-based invariants for the cluster axis and drift schedule.
+
+Requires hypothesis (skipped wholesale when not installed — CI's
+forced-8-device job carries it; tests/test_cluster_engine.py holds
+deterministic twins of the core claims so local runs without hypothesis
+still exercise them).
+"""
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.data.partition import drift_schedule, partition, stack_clients  # noqa: E402
+from repro.data.synthetic import make_image_dataset  # noqa: E402
+from repro.fl.clusters import ModelBank, argmin_assign  # noqa: E402
+
+_SETTINGS = settings(max_examples=25, deadline=None)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    (xtr, ytr), _ = make_image_dataset(
+        num_classes=4, train_per_class=30, test_per_class=5, hw=8,
+        noise=0.4, seed=0)
+    parts = partition("case1", ytr, 8, 4, seed=0)
+    data = stack_clients(xtr, ytr, parts, batch_multiple=10)
+    return xtr, ytr, data
+
+
+# --------------------------------------------------------- drift_schedule
+@_SETTINGS
+@given(seed=st.integers(0, 2**31 - 1), at=st.integers(0, 50))
+def test_drift_schedule_seed_deterministic(corpus, seed, at):
+    """Same (seed, at) -> identical events, arrays included."""
+    xtr, ytr, data = corpus
+    spc = int(data["y"].shape[1])
+    a = drift_schedule(xtr, ytr, 8, 4, at=at, seed=seed,
+                       samples_per_client=spc)
+    b = drift_schedule(xtr, ytr, 8, 4, at=at, seed=seed,
+                       samples_per_client=spc)
+    assert len(a) == len(b)
+    for ea, eb in zip(a, b):
+        assert ea.round == eb.round == at
+        assert ea.clients == eb.clients
+        assert sorted(ea.data) == sorted(eb.data)
+        for k in ea.data:
+            np.testing.assert_array_equal(ea.data[k], eb.data[k])
+
+
+@_SETTINGS
+@given(seed=st.integers(0, 2**31 - 1),
+       frac=st.floats(0.1, 1.0, allow_nan=False))
+def test_drift_schedule_shape_contract(corpus, seed, frac):
+    """Events carry distinct in-range clients, one data row per client,
+    and every row respects the corpus's fixed per-client sample axis."""
+    xtr, ytr, data = corpus
+    spc = int(data["y"].shape[1])
+    events = drift_schedule(xtr, ytr, 8, 4, at=3, frac=frac, seed=seed,
+                            samples_per_client=spc)
+    for ev in events:
+        assert len(set(ev.clients)) == len(ev.clients) >= 1
+        assert all(0 <= c < 8 for c in ev.clients)
+        for v in ev.data.values():
+            assert np.shape(v)[0] == len(ev.clients)
+            assert np.shape(v)[1] == spc
+
+
+@_SETTINGS
+@given(seed=st.integers(0, 2**31 - 1))
+def test_drift_schedule_changes_labels(corpus, seed):
+    """A drift event actually re-partitions: at least one drifting
+    client's label row differs from its pre-drift row."""
+    xtr, ytr, data = corpus
+    ev = drift_schedule(xtr, ytr, 8, 4, at=1, seed=seed,
+                        samples_per_client=int(data["y"].shape[1]))[0]
+    before = np.asarray(data["y"])
+    after = np.asarray(ev.data["y"])
+    assert any(not np.array_equal(after[i], before[c])
+               for i, c in enumerate(ev.clients))
+
+
+# ---------------------------------------------------------- argmin_assign
+@_SETTINGS
+@given(st.integers(1, 6), st.integers(1, 16),
+       st.integers(0, 2**31 - 1))
+def test_argmin_assign_partitions(k, m, seed):
+    """Every client gets exactly one cluster id in [0, K); K=1 is the
+    constant zero map; ties break to the lowest center index."""
+    scores = np.random.default_rng(seed).normal(size=(k, m))
+    cids = argmin_assign(scores)
+    assert cids.shape == (m,)
+    assert cids.dtype == np.int64
+    assert np.all((cids >= 0) & (cids < k))
+    if k == 1:
+        np.testing.assert_array_equal(cids, np.zeros(m, np.int64))
+    # tie-break: duplicating the winning row at a higher index must not
+    # move any assignment upward
+    tied = np.concatenate([scores, scores[cids, np.arange(m)][None, :]
+                           * np.ones((1, m))], axis=0)
+    np.testing.assert_array_equal(argmin_assign(tied), cids)
+
+
+@_SETTINGS
+@given(st.integers(2, 5), st.integers(0, 2**31 - 1))
+def test_model_bank_gather_roundtrip(k, seed):
+    """gather(cids) row j is bitwise the assigned center's leaves."""
+    rng = np.random.default_rng(seed)
+    params = {"w": rng.normal(size=(3, 2)).astype(np.float32),
+              "b": rng.normal(size=(2,)).astype(np.float32)}
+    bank = ModelBank.init(params, k, seed=seed % 997)
+    cids = rng.integers(0, k, size=5)
+    g = bank.gather(cids)
+    for j, c in enumerate(cids):
+        for leaf, center in zip(jax.tree.leaves(g),
+                                jax.tree.leaves(bank.center(int(c)))):
+            np.testing.assert_array_equal(np.asarray(leaf[j]),
+                                          np.asarray(center))

@@ -50,6 +50,12 @@ def test_registry_roundtrip():
         fl.get("selector", recipe.selector)
         fl.get("judge", recipe.judge)
         fl.get("aggregator", recipe.aggregator)
+        if recipe.cluster is not None:
+            assert fl.get("cluster", recipe.cluster) is not None
+    # the cluster axis registers like any other kind
+    assert fl.get("cluster", "ifca") is fl.IFCAAssigner
+    assert fl.get("cluster", "fesem") is fl.FeSEMAssigner
+    assert fl.get("composition", "ifca+maxent").cluster == "ifca"
 
 
 def test_registry_unknown_name_errors():

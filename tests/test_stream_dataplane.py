@@ -293,6 +293,57 @@ def test_prefetcher_hit_miss_cancel(tiny):
     assert hc.prefetcher().staging_nbytes == nb
 
 
+def test_prefetcher_depth_ring(tiny):
+    """depth>1 queues multiple predictions FIFO; depth=1 keeps the
+    historical single-slot overwrite semantics bit-for-bit."""
+    data, _ = tiny
+    hc = HostCorpus(dict(data), prefetch_depth=2)
+    assert hc.prefetcher().depth == 2
+    a, b, c = (np.asarray([0, 1]), np.asarray([2, 3]), np.asarray([4, 5]))
+    plain = {k: {kk: np.asarray(v) for kk, v in hc.cohort(i).items()}
+             for k, i in zip("abc", (a, b, c))}
+    # two in flight, consumed in order: both hits, both bit-equal
+    hc.prefetch(a)
+    hc.prefetch(b)
+    for key, idx in (("a", a), ("b", b)):
+        got = hc.cohort(idx)
+        for k in plain[key]:
+            np.testing.assert_array_equal(plain[key][k],
+                                          np.asarray(got[k]))
+    assert hc.prefetch_stats()["hits"] == 2
+    assert hc.prefetch_stats()["misses"] == 0
+    # a third start evicts the OLDEST queued prediction (cancelled)
+    hc.prefetch(a)
+    hc.prefetch(b)
+    hc.prefetch(c)
+    assert hc.prefetch_stats()["cancelled"] == 1
+    # stale prediction ahead of the match is discarded as a miss
+    got = hc.cohort(c)
+    for k in plain["c"]:
+        np.testing.assert_array_equal(plain["c"][k], np.asarray(got[k]))
+    assert hc.prefetch_stats()["misses"] == 1
+    assert hc.prefetch_stats()["hits"] == 3
+    # cancel drops everything still queued
+    hc.prefetch(a)
+    hc.prefetch(b)
+    hc.cancel_prefetch()
+    assert hc.prefetch_stats()["cancelled"] == 3
+    # the ring stays bounded at depth+1 buffers under sustained traffic
+    for _ in range(4):
+        hc.prefetch(a)
+        hc.prefetch(b)
+        hc.cohort(a)
+        hc.cohort(b)
+    nb = hc.prefetcher().staging_nbytes
+    hc.prefetch(a)
+    hc.prefetch(b)
+    hc.cohort(a)
+    hc.cohort(b)
+    assert hc.prefetcher().staging_nbytes == nb
+    with pytest.raises(ValueError, match="depth"):
+        HostCorpus(dict(data), prefetch_depth=0)
+
+
 class _WrongSpeculationJudge(fl.MaxEntropyJudge):
     """Oracle = real maxent; traced form always admits everyone, so every
     round with a rejection misspeculates."""
